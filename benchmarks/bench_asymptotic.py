@@ -1,0 +1,63 @@
+"""Table II verification: the iteration cost scales with t * nnz * v_r and
+is independent of V; only the precompute carries the V * v_r * w term.
+
+Times the LOOP in isolation (the paper's bound is about the loop; the
+V-dependent precompute is a separate Table II term)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit, wmd_problem
+from repro.core import precompute
+from repro.core.sparse_sinkhorn import pad_k, safe_recip, sddmm_spmm_type1
+
+ITERS = 10
+
+
+def _loop_only(p):
+    pre = jax.jit(precompute, static_argnames=("lamb",))(
+        p["sel"], p["r_sel"], p["vecs"], lamb=1.0)
+    k_pad = pad_k(pre.K)
+    x0 = jnp.full((p["v_r"], p["docs"]), 1.0 / p["v_r"], jnp.float32)
+
+    @jax.jit
+    def loop(k_pad, r, x, cols, vals):
+        def body(_, x):
+            return sddmm_spmm_type1(k_pad, r, safe_recip(x), cols, vals)
+        return jax.lax.fori_loop(0, ITERS, body, x)
+
+    return timeit(loop, k_pad, pre.r, x0, p["cols"], p["vals"])
+
+
+def run() -> dict:
+    # scaling in nnz (via docs): expected exponent ~1.0
+    docs_list = (256, 1024, 4096)
+    times, nnzs = [], []
+    for docs in docs_list:
+        p = wmd_problem(docs=docs)
+        times.append(_loop_only(p))
+        nnzs.append(p["nnz"])
+    exp = float(np.polyfit(np.log(nnzs), np.log(times), 1)[0])
+    emit("table2/loop_nnz_scaling_exponent", times[-1] * 1e6,
+         f"exponent={exp:.2f};expected~1.0")
+
+    # V-independence of the loop at fixed nnz (dense algorithm would be ~4x)
+    t_v1 = _loop_only(wmd_problem(vocab=10_000, docs=1024))
+    t_v2 = _loop_only(wmd_problem(vocab=40_000, docs=1024))
+    emit("table2/loop_vocab_4x_ratio", t_v2 * 1e6,
+         f"ratio={t_v2 / t_v1:.2f};sparse_expected~1.0;dense_would_be~4.0")
+
+    # precompute DOES scale with V (the V*v_r*w term)
+    p1 = wmd_problem(vocab=10_000, docs=256)
+    p2 = wmd_problem(vocab=40_000, docs=256)
+    pre_t1 = timeit(jax.jit(functools.partial(precompute, lamb=1.0)),
+                    p1["sel"], p1["r_sel"], p1["vecs"])
+    pre_t2 = timeit(jax.jit(functools.partial(precompute, lamb=1.0)),
+                    p2["sel"], p2["r_sel"], p2["vecs"])
+    emit("table2/precompute_vocab_4x_ratio", pre_t2 * 1e6,
+         f"ratio={pre_t2 / pre_t1:.2f};expected~4.0")
+    return {"nnz_exponent": exp, "loop_vocab_ratio": t_v2 / t_v1}

@@ -1,0 +1,31 @@
+"""Fig. 9 analogue: speedup from SDDMM-SpMM fusion.
+
+Paper: 1.15-2.22x, growing with cores (fusion saves memory traffic, and
+more cores = more bandwidth-bound). Cores cannot be swept on this
+container; the bandwidth-pressure axis here is the doc count (bigger N =
+more gather traffic per iteration), plus the vocab-chunked driver as a
+shard-count proxy."""
+from __future__ import annotations
+
+import functools
+
+from benchmarks.common import emit, timeit, wmd_problem
+from repro.core import sinkhorn_wmd_sparse
+
+ITERS = 10
+
+
+def run() -> dict:
+    out = {}
+    for docs in (128, 512, 2048):
+        p = wmd_problem(docs=docs)
+        args = (p["sel"], p["r_sel"], p["cols"], p["vals"], p["vecs"])
+        f = functools.partial(sinkhorn_wmd_sparse, lamb=1.0, max_iter=ITERS,
+                              impl="fused")
+        u = functools.partial(sinkhorn_wmd_sparse, lamb=1.0, max_iter=ITERS,
+                              impl="unfused")
+        tf, tu = timeit(f, *args), timeit(u, *args)
+        emit(f"fig9/fusion_speedup_docs{docs}", tf * 1e6,
+             f"fused_vs_unfused={tu / tf:.2f}x")
+        out[docs] = tu / tf
+    return out

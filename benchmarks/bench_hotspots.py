@@ -1,0 +1,52 @@
+"""Table I analogue: per-phase hotspot profile of the solver.
+
+Paper (Xeon, dense python): cdist 1.4%, SDDMM-ish line 91.9% + 6.1%, SpMM
+0.5%. The sparse algorithm flips the profile -- the convergence loop stops
+dominating. Phases timed: precompute (cdist+K), loop (type1 x iters),
+final (type2)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit, wmd_problem
+from repro.core import precompute
+from repro.core.sparse_sinkhorn import (pad_k, safe_recip, sddmm_spmm_type1,
+                                        sddmm_spmm_type2)
+
+ITERS = 10
+
+
+def run() -> dict:
+    p = wmd_problem()
+
+    pre_fn = jax.jit(functools.partial(precompute, p["sel"], p["r_sel"],
+                                       p["vecs"], 1.0))
+    pre = pre_fn()
+    k_pad, km_pad = pad_k(pre.K), pad_k(pre.KM)
+    x0 = jnp.full((p["v_r"], p["docs"]), 1.0 / p["v_r"], jnp.float32)
+
+    @jax.jit
+    def loop(k_pad, r, x, cols, vals):
+        def body(_, x):
+            return sddmm_spmm_type1(k_pad, r, safe_recip(x), cols, vals)
+        return jax.lax.fori_loop(0, ITERS, body, x)
+
+    @jax.jit
+    def final(k_pad, km_pad, x, cols, vals):
+        return sddmm_spmm_type2(k_pad, km_pad, safe_recip(x), cols, vals)
+
+    x = loop(k_pad, pre.r, x0, p["cols"], p["vals"])
+    t_pre = timeit(pre_fn)
+    t_loop = timeit(loop, k_pad, pre.r, x0, p["cols"], p["vals"])
+    t_final = timeit(final, k_pad, km_pad, x, p["cols"], p["vals"])
+    total = t_pre + t_loop + t_final
+    emit("table1/precompute_cdist_K", t_pre * 1e6,
+         f"pct={100 * t_pre / total:.1f}%")
+    emit("table1/loop_sddmm_spmm_t1", t_loop * 1e6,
+         f"pct={100 * t_loop / total:.1f}%;per_iter_us={t_loop / ITERS * 1e6:.1f}")
+    emit("table1/final_sddmm_spmm_t2", t_final * 1e6,
+         f"pct={100 * t_final / total:.1f}%")
+    return {"pre": t_pre, "loop": t_loop, "final": t_final}

@@ -1,0 +1,35 @@
+"""Fig. 8 analogue: runtime of all implementations + speedups.
+
+Paper: MKL-python 47s -> baseline C++ 1.46s (32x) -> fused C++ 0.035s
+(42x more, ~700-1331x total). Here the ladder is: dense jnp (the naive
+formulation the paper starts from) -> sparse unfused -> sparse fused ->
+fused with precompute kernel path. Speedups are the 'derived' column.
+"""
+from __future__ import annotations
+
+import functools
+
+from benchmarks.common import emit, timeit, wmd_problem
+from repro.core import sinkhorn_wmd_dense, sinkhorn_wmd_sparse
+
+ITERS = 10
+
+
+def run() -> dict:
+    p = wmd_problem()
+    dense = functools.partial(sinkhorn_wmd_dense, lamb=1.0, max_iter=ITERS)
+    unfused = functools.partial(sinkhorn_wmd_sparse, lamb=1.0,
+                                max_iter=ITERS, impl="unfused")
+    fused = functools.partial(sinkhorn_wmd_sparse, lamb=1.0, max_iter=ITERS,
+                              impl="fused")
+    t_dense = timeit(dense, p["sel"], p["r_sel"], p["c_dense"], p["vecs"])
+    t_unfused = timeit(unfused, p["sel"], p["r_sel"], p["cols"], p["vals"],
+                       p["vecs"])
+    t_fused = timeit(fused, p["sel"], p["r_sel"], p["cols"], p["vals"],
+                     p["vecs"])
+    emit("fig8/dense_naive", t_dense * 1e6, "speedup=1.0x")
+    emit("fig8/sparse_unfused", t_unfused * 1e6,
+         f"speedup={t_dense / t_unfused:.1f}x")
+    emit("fig8/sparse_fused", t_fused * 1e6,
+         f"speedup={t_dense / t_fused:.1f}x;fusion={t_unfused / t_fused:.2f}x")
+    return {"dense": t_dense, "unfused": t_unfused, "fused": t_fused}

@@ -1,0 +1,52 @@
+"""Kernel microbenches: jnp fused path vs Pallas(interpret) correctness-path
+cost, cdist matmul-vs-direct, fused precompute (kexp) saving.
+
+interpret-mode Pallas timing on CPU is NOT a TPU performance statement (the
+kernel body runs through the interpreter); it is reported for completeness.
+The TPU-side statement is the roofline analysis (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from benchmarks.common import emit, timeit, wmd_problem
+from repro.core import precompute
+from repro.core.cost_matrix import cdist_direct, cdist_matmul
+from repro.core.sparse_sinkhorn import pad_k, sddmm_spmm_type1
+from repro.kernels import ops
+
+
+def run() -> dict:
+    p = wmd_problem(vocab=4096, docs=128)
+    pre = precompute(p["sel"], p["r_sel"], p["vecs"], 1.0)
+    k_pad = pad_k(pre.K)
+    u = 1.0 / jax.numpy.full((p["v_r"], p["docs"]), 1.0 / p["v_r"])
+
+    jnp_t1 = jax.jit(sddmm_spmm_type1)
+    t_jnp = timeit(jnp_t1, k_pad, pre.r, u, p["cols"], p["vals"])
+    emit("kernels/type1_jnp_fused", t_jnp * 1e6, "production jnp path")
+    t_pal = timeit(functools.partial(ops.sddmm_spmm_type1, docs_blk=8),
+                   k_pad, pre.r, u, p["cols"], p["vals"])
+    emit("kernels/type1_pallas_interpret", t_pal * 1e6,
+         "CPU interpreter (correctness path, not TPU perf)")
+
+    a = p["vecs"][p["sel"]]
+    t_direct = timeit(jax.jit(cdist_direct), a, p["vecs"])
+    t_matmul = timeit(jax.jit(cdist_matmul), a, p["vecs"])
+    emit("kernels/cdist_direct", t_direct * 1e6, "VPU form")
+    emit("kernels/cdist_matmul", t_matmul * 1e6,
+         f"MXU form;speedup={t_direct / t_matmul:.2f}x")
+
+    # fused precompute: one pass producing (K, KM) vs cdist+exp+mul chain
+    lamb = 1.0
+    t_unfused_pre = timeit(
+        jax.jit(functools.partial(precompute, lamb=lamb)),
+        p["sel"], p["r_sel"], p["vecs"])
+    t_fused_pre = timeit(
+        functools.partial(ops.cdist_kexp, lamb=lamb, v_tile=512),
+        a, p["vecs"])
+    emit("kernels/precompute_unfused", t_unfused_pre * 1e6, "cdist+exp+mul")
+    emit("kernels/precompute_kexp_interpret", t_fused_pre * 1e6,
+         "fused single pass (interpret)")
+    return {}

@@ -1,0 +1,53 @@
+"""Shared benchmark utilities: deterministic problem builder + timer."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ell_from_dense, select_query
+from repro.data.corpus import make_corpus
+
+
+def timeit(fn, *args, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` after warmup (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def wmd_problem(*, vocab=20_000, embed=300, docs=512, query_words=19,
+                seed=0):
+    """Paper-statistics problem at CPU-benchable scale.
+
+    The paper's full dataset (V=100k, N=5000) is a ~50x larger instance of
+    exactly this generator; benchmarks report derived per-unit costs that
+    extrapolate linearly (Table II asymptotics -- verified by
+    bench_asymptotic).
+    """
+    data = make_corpus(vocab_size=vocab, embed_dim=embed, num_docs=docs,
+                       num_queries=1, query_words=query_words, seed=seed)
+    sel, r_sel = select_query(data.queries[0])
+    return {
+        "vecs": jnp.asarray(data.vecs),
+        "sel": jnp.asarray(sel),
+        "r_sel": jnp.asarray(r_sel),
+        "cols": jnp.asarray(data.ell.cols),
+        "vals": jnp.asarray(data.ell.vals),
+        "c_dense": jnp.asarray(data.ell.to_dense()),
+        "ell": data.ell,
+        "nnz": data.nnz,
+        "vocab": vocab, "docs": docs, "embed": embed,
+        "v_r": int(sel.shape[0]),
+    }
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,39 @@
+"""Benchmark harness -- one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``  prints ``name,us_per_call,derived``
+CSV rows. Roofline terms (the TPU-side performance statement) come from the
+dry-run artifacts -- see launch/roofline.py and EXPERIMENTS.md.
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_asymptotic, bench_fusion, bench_hotspots,
+                            bench_impl_comparison, bench_kernels,
+                            bench_padding, bench_scaling)
+    print("name,us_per_call,derived")
+    modules = [
+        ("fig8", bench_impl_comparison),
+        ("table1", bench_hotspots),
+        ("fig9", bench_fusion),
+        ("fig10", bench_scaling),
+        ("table2", bench_asymptotic),
+        ("kernels", bench_kernels),
+        ("padding", bench_padding),
+    ]
+    failed = []
+    for name, mod in modules:
+        try:
+            mod.run()
+        except Exception as e:  # report and continue; harness must finish
+            failed.append(name)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}",
+                  file=sys.stderr)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,5 @@
+"""Sharded async elastic checkpointing."""
+from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
+                                           restore, save)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]

@@ -1,0 +1,12 @@
+"""Architecture configs: one module per assigned arch + the paper's own
+Sinkhorn-WMD workload. See `repro.configs.registry` for --arch dispatch."""
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig,
+                                EncoderConfig, SHAPES, ShapeConfig)
+from repro.configs.registry import (arch_ids, cell_supported, cells,
+                                    get_config, get_shape, get_smoke_config)
+
+__all__ = [
+    "MLAConfig", "ModelConfig", "MoEConfig", "EncoderConfig", "SHAPES",
+    "ShapeConfig", "arch_ids", "cell_supported", "cells", "get_config",
+    "get_shape", "get_smoke_config",
+]

@@ -1,0 +1,34 @@
+"""PASWD core: the paper's Sinkhorn-WMD contribution as composable JAX modules.
+
+Layers (bottom-up):
+  cost_matrix     -- euclidean transportation-cost matrix (MXU matmul form)
+  formats         -- CSR/ELL sparse layouts + vocab-shard re-bucketing
+  sinkhorn        -- paper Algorithm 1, dense (faithful baseline + oracle)
+  sparse_sinkhorn -- PASWD: fused SDDMM-SpMM sparse solver (the contribution)
+  ot              -- generic Sinkhorn OT (shared with the MoE router)
+  convergence     -- while-x-changes early-exit solver
+  distributed     -- shard_map multi-chip / multi-pod engine
+"""
+from repro.core.cost_matrix import cdist, cdist_direct, cdist_matmul
+from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
+                                ell_from_dense, ell_from_csc,
+                                ell_from_doc_lists, pad_docs,
+                                rebucket_for_vocab_shards)
+from repro.core.sinkhorn import (SinkhornPrecompute, precompute, select_query,
+                                 sinkhorn_wmd_dense)
+from repro.core.sparse_sinkhorn import (pad_k, sddmm, spmm, sddmm_spmm_type1,
+                                        sddmm_spmm_type2, sinkhorn_wmd_sparse)
+from repro.core.ot import SinkhornResult, sinkhorn_divergence, sinkhorn_plan
+from repro.core.convergence import ConvergedWMD, sinkhorn_wmd_converged
+
+__all__ = [
+    "cdist", "cdist_direct", "cdist_matmul",
+    "BucketedEll", "EllDocs", "bucket_by_length",
+    "ell_from_dense", "ell_from_csc", "ell_from_doc_lists",
+    "pad_docs", "rebucket_for_vocab_shards",
+    "SinkhornPrecompute", "precompute", "select_query", "sinkhorn_wmd_dense",
+    "pad_k", "sddmm", "spmm", "sddmm_spmm_type1", "sddmm_spmm_type2",
+    "sinkhorn_wmd_sparse",
+    "SinkhornResult", "sinkhorn_divergence", "sinkhorn_plan",
+    "ConvergedWMD", "sinkhorn_wmd_converged",
+]

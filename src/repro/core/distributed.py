@@ -1,0 +1,204 @@
+"""Multi-chip / multi-pod Sinkhorn-WMD engine (shard_map).
+
+Distribution plan (DESIGN.md section 4.1) -- the TPU analogue of the paper's
+PIUMA DGAS scale-out:
+
+  * docs (N)  shard over the ``data`` (and ``pod``) mesh axes. Documents are
+    independent given K, so this axis needs **zero** communication -- the
+    paper's "one query vs many target docs" parallelism.
+  * vocab (V) shards over ``model``. Each chip holds the K/K.*M stripe for
+    its vocab range and exactly the ELL nonzeros whose word-id falls in that
+    range (`formats.rebucket_for_vocab_shards`). The SDDMM dot product
+    w[j,k] = <K[:, col], u[:, j]> is therefore **fully local** -- a word's K
+    column lives with its nonzero, the DGAS locality argument made explicit.
+  * the only collective is one ``psum`` over ``model`` per Sinkhorn iteration
+    (the partial SpMM contributions, v_r x N_local floats per chip), plus one
+    scalar-per-doc psum for the final distances. Per-chip psum bytes are
+    independent of pod count at fixed per-chip work -- the TPU version of the
+    paper's "no performance hit from 1 die to 8 dies".
+
+The per-device compute reuses the *same* fused SDDMM-SpMM code (jnp or
+Pallas) as the single-chip path; `ops.sddmm_spmm_chunked` is the one-chip
+replay of this exact decomposition.
+
+Query padding: multiple queries are bucketed to a common v_r; pad rows carry
+r = 1 and an all-zero K row (`pad_query` + the row mask in `masked_k`), which
+makes padded rows contribute *exactly* zero to every w, x and WMD -- no
+epsilon approximations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.cost_matrix import cdist
+from repro.core.sparse_sinkhorn import pad_k, safe_recip
+from repro.core import sparse_sinkhorn as ss
+
+
+# ---------------------------------------------------------------------------
+# Query padding (exact, mask-based)
+# ---------------------------------------------------------------------------
+
+def pad_query(sel_idx: np.ndarray, r_sel: np.ndarray, v_r_target: int
+              ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a query to a bucket size. Returns (sel_idx, r_sel, row_mask).
+
+    Pad rows point at word 0 with r = 1.0; the row mask zeroes their K rows
+    so they contribute nothing anywhere (see module docstring).
+    """
+    v_r = sel_idx.shape[0]
+    if v_r > v_r_target:
+        raise ValueError(f"query v_r {v_r} exceeds bucket {v_r_target}")
+    pad = v_r_target - v_r
+    sel_p = np.concatenate([sel_idx, np.zeros(pad, sel_idx.dtype)])
+    r_p = np.concatenate([r_sel.astype(np.float32), np.ones(pad, np.float32)])
+    mask = np.concatenate([np.ones(v_r, np.float32), np.zeros(pad, np.float32)])
+    return sel_p, r_p, mask
+
+
+def masked_k(vecs_sel: jax.Array, vecs_loc: jax.Array, lamb: float,
+             row_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Local K / K.*M stripes with padded query rows zeroed."""
+    m = cdist(vecs_sel, vecs_loc)                      # (v_r, Vloc)
+    k = jnp.exp(-lamb * m) * row_mask[:, None]
+    return k, k * m
+
+
+# ---------------------------------------------------------------------------
+# The per-device program
+# ---------------------------------------------------------------------------
+
+def _local_solve(vecs_sel, r_sel, row_mask, vecs_loc, cols_loc, vals_loc, *,
+                 lamb: float, max_iter: int, model_axis: str,
+                 use_kernel: bool):
+    """Runs on every device under shard_map. Doc axis: local slice; vocab
+    axis: local stripe. Returns the (N_local,) WMD slice."""
+    k, km = masked_k(vecs_sel, vecs_loc, lamb, row_mask)
+    k_pad, km_pad = pad_k(k), pad_k(km)
+    v_r = r_sel.shape[0]
+    n_loc = cols_loc.shape[0]
+    ones_r = jnp.ones_like(r_sel)
+
+    def type1_partial(u):
+        if use_kernel:
+            from repro.kernels import ops
+            return ops.sddmm_spmm_type1(k_pad, ones_r, u, cols_loc, vals_loc)
+        return ss.sddmm_spmm_type1(k_pad, ones_r, u, cols_loc, vals_loc)
+
+    def body(_, x):
+        u = safe_recip(x)
+        x_part = type1_partial(u)                      # local vocab stripe
+        x_full = jax.lax.psum(x_part, model_axis)      # THE collective
+        return x_full / r_sel[:, None]
+
+    x0 = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
+    x = jax.lax.fori_loop(0, max_iter, body, x0)
+    u = safe_recip(x)
+    # final distance: local xm then scalar-per-doc psum (v_r x cheaper than
+    # reducing xm itself)
+    if use_kernel:
+        from repro.kernels import ops
+        wmd_part = ops.sddmm_spmm_type2(k_pad, km_pad, u, cols_loc, vals_loc)
+    else:
+        wmd_part = ss.sddmm_spmm_type2(k_pad, km_pad, u, cols_loc, vals_loc)
+    return jax.lax.psum(wmd_part, model_axis)
+
+
+# ---------------------------------------------------------------------------
+# Public driver
+# ---------------------------------------------------------------------------
+
+def build_wmd_fn(mesh: Mesh, *, lamb: float, max_iter: int,
+                 doc_axes: Sequence[str] = ("data",),
+                 model_axis: str = "model",
+                 use_kernel: bool = False):
+    """Build the jit'd multi-chip WMD solver for ``mesh``.
+
+    The returned fn takes (vecs_sel, r_sel, row_mask, vecs, cols_b, vals_b):
+      vecs_sel (v_r, w)              replicated   -- query word embeddings
+      r_sel    (v_r,)                replicated
+      row_mask (v_r,)                replicated
+      vecs     (V, w)                P(model)     -- vocab-striped embeddings
+      cols_b   (S_model, N, nnz_loc) P(model, doc_axes) -- rebucketed ELL
+      vals_b   (S_model, N, nnz_loc) P(model, doc_axes)
+    and returns wmd (N,) sharded over doc_axes.
+    """
+    doc_spec = P(tuple(doc_axes))
+    in_specs = (P(None, None), P(None), P(None),
+                P(model_axis, None),
+                P(model_axis, *[tuple(doc_axes)], None),
+                P(model_axis, *[tuple(doc_axes)], None))
+    out_specs = doc_spec
+
+    def per_device(vecs_sel, r_sel, row_mask, vecs_loc, cols_b, vals_b):
+        # leading (shard-local) model axis is size 1 after sharding
+        cols_loc = cols_b[0]
+        vals_loc = vals_b[0]
+        return _local_solve(vecs_sel, r_sel, row_mask, vecs_loc,
+                            cols_loc, vals_loc, lamb=lamb, max_iter=max_iter,
+                            model_axis=model_axis, use_kernel=use_kernel)
+
+    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def build_wmd_fn_docsharded(mesh: Mesh, *, lamb: float, max_iter: int,
+                            use_kernel: bool = False):
+    """Doc-sharded / K-replicated layout (the §Perf-optimized engine for
+    moderate v_r): K is only v_r x V x 4B (12.8 MB at the paper's scale), so
+    every chip keeps the whole stripe and docs shard over ALL mesh axes --
+    the Sinkhorn loop then has ZERO collectives (vs one psum/iter for the
+    vocab-sharded engine). The vocab-sharded engine remains the scale-out
+    path for large v_r buckets where K would not fit (DESIGN.md section 4.1).
+
+    Returned fn takes (vecs_sel, r_sel, row_mask, vecs, cols, vals):
+      vecs (V, w) replicated; cols/vals (N, nnz) sharded over every mesh
+      axis on the doc dim.
+    """
+    all_axes = tuple(mesh.axis_names)
+    in_specs = (P(None, None), P(None), P(None), P(None, None),
+                P(all_axes, None), P(all_axes, None))
+
+    def per_device(vecs_sel, r_sel, row_mask, vecs, cols_loc, vals_loc):
+        k, km = masked_k(vecs_sel, vecs, lamb, row_mask)
+        k_pad, km_pad = pad_k(k), pad_k(km)
+        v_r = r_sel.shape[0]
+        n_loc = cols_loc.shape[0]
+        x0 = jnp.full((v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
+
+        def t1(u):
+            if use_kernel:
+                from repro.kernels import ops
+                return ops.sddmm_spmm_type1(k_pad, r_sel, u, cols_loc,
+                                            vals_loc)
+            return ss.sddmm_spmm_type1(k_pad, r_sel, u, cols_loc, vals_loc)
+
+        x = jax.lax.fori_loop(0, max_iter,
+                              lambda _, x: t1(safe_recip(x)), x0)
+        u = safe_recip(x)
+        if use_kernel:
+            from repro.kernels import ops
+            return ops.sddmm_spmm_type2(k_pad, km_pad, u, cols_loc, vals_loc)
+        return ss.sddmm_spmm_type2(k_pad, km_pad, u, cols_loc, vals_loc)
+
+    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(all_axes), check_vma=False)
+    return jax.jit(fn)
+
+
+def shard_wmd_inputs(mesh: Mesh, vecs: np.ndarray, cols_b: np.ndarray,
+                     vals_b: np.ndarray, *, doc_axes: Sequence[str] = ("data",),
+                     model_axis: str = "model"):
+    """Place host arrays on the mesh with the layouts build_wmd_fn expects."""
+    dev = lambda spec: NamedSharding(mesh, spec)
+    vecs_d = jax.device_put(vecs, dev(P(model_axis, None)))
+    cols_d = jax.device_put(cols_b, dev(P(model_axis, tuple(doc_axes), None)))
+    vals_d = jax.device_put(vals_b, dev(P(model_axis, tuple(doc_axes), None)))
+    return vecs_d, cols_d, vals_d

@@ -1,0 +1,161 @@
+"""PASWD: the paper's sparse-heavy Sinkhorn-WMD with fused SDDMM-SpMM.
+
+This is the paper's contribution, re-architected for TPU (DESIGN.md sections
+2-3). The document-frequency matrix is doc-major padded ELL (`core.formats`);
+the SDDMM samples only the nnz dot products, and the fusion reuses the
+*single* VMEM gather of K columns for both the SDDMM contraction and the SpMM
+contraction (K_over_r differs from K only by the per-row 1/r scale):
+
+    SDDMM : w[j,k] = sum_i K[i, cols[j,k]] * u[i,j]
+            v[j,k] = vals[j,k] / w[j,k]
+    SpMM  : x[i,j] = (1/r[i]) * sum_k K[i, cols[j,k]] * v[j,k]
+
+type2 (final distance) swaps the SpMM operand to K.*M and reduces in-kernel:
+
+    WMD[j] = sum_i u[i,j] * sum_k (K.*M)[i, cols[j,k]] * v[j,k]
+
+Three execution paths, selected by ``impl``:
+  * "fused"    -- single gather per iteration (jnp). Production jnp path and
+                  oracle for the Pallas kernel.
+  * "unfused"  -- separate SDDMM / SpMM with independent gathers, mirroring
+                  the paper's pre-fusion baseline (Fig. 9 numerator).
+  * "kernel"   -- `repro.kernels.ops` Pallas kernels (interpret=True on CPU).
+
+All paths consume K padded with one trailing zero column so ELL pad slots
+(col == V) contribute exactly zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sinkhorn import SinkhornPrecompute, precompute
+
+_IMPLS = ("fused", "unfused", "kernel")
+
+# Reciprocal guard: K = exp(-lamb*M) underflows f32 for far word pairs, and
+# the u = 1/x nonlinearity amplifies it to inf*0 = nan. Clamping the
+# denominator at TINY is exact for healthy values and replaces inf by a huge
+# finite number otherwise (the paper sidesteps this with f64 inputs).
+TINY = 1e-30
+
+
+def safe_recip(x: jax.Array) -> jax.Array:
+    return 1.0 / jnp.maximum(x, TINY)
+
+
+def pad_k(k: jax.Array) -> jax.Array:
+    """Append a zero column: gathers of the ELL pad id (== V) read zeros."""
+    return jnp.pad(k, ((0, 0), (0, 1)))
+
+
+# ---------------------------------------------------------------------------
+# jnp building blocks (also serve as kernel oracles via kernels/ref.py)
+# ---------------------------------------------------------------------------
+
+def gather_k(k_pad: jax.Array, cols: jax.Array) -> jax.Array:
+    """Gather K columns per ELL slot: (v_r, V+1), (N, nnz) -> (N, nnz, v_r)."""
+    return k_pad.T[cols]
+
+
+def sddmm(k_pad: jax.Array, u: jax.Array, cols: jax.Array,
+          vals: jax.Array) -> jax.Array:
+    """Sampled dense-dense matmul: v[j,k] = vals[j,k] / (K^T u)[cols[j,k], j]."""
+    kg = gather_k(k_pad, cols)                       # gather #1
+    w = jnp.einsum("nki,in->nk", kg, u)
+    return jnp.where(vals != 0.0, vals * safe_recip(w), 0.0)
+
+
+def spmm(kor_pad: jax.Array, v: jax.Array, cols: jax.Array) -> jax.Array:
+    """x[i,j] = sum_k K_over_r[i, cols[j,k]] * v[j,k] -- re-gathers K."""
+    kg = gather_k(kor_pad, cols)                     # gather #2 (unfused cost)
+    return jnp.einsum("nki,nk->in", kg, v)
+
+
+def sddmm_spmm_type1(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
+                     cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """Fused iteration body: one gather feeds both contractions."""
+    kg = gather_k(k_pad, cols)                       # the ONLY gather
+    w = jnp.einsum("nki,in->nk", kg, u)
+    v = jnp.where(vals != 0.0, vals * safe_recip(w), 0.0)
+    x = jnp.einsum("nki,nk->in", kg, v)
+    return x / r_sel[:, None]
+
+
+def sddmm_spmm_type2(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
+                     cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """Fused final distance: 3 dense (K, K.*M, u) + 2 sparse (cols, vals)."""
+    kg = gather_k(k_pad, cols)
+    kmg = gather_k(km_pad, cols)
+    w = jnp.einsum("nki,in->nk", kg, u)
+    v = jnp.where(vals != 0.0, vals * safe_recip(w), 0.0)
+    xm = jnp.einsum("nki,nk->in", kmg, v)
+    return jnp.sum(u * xm, axis=0)                   # (N,)
+
+
+def _iteration(impl: str, pre_kpad: jax.Array, r_sel: jax.Array,
+               x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
+    u = safe_recip(x)
+    if impl == "fused":
+        return sddmm_spmm_type1(pre_kpad, r_sel, u, cols, vals)
+    if impl == "unfused":
+        # independent gathers, with a barrier so XLA cannot CSE them back
+        # into the fused form (keeps the Fig. 9 baseline honest).
+        v = sddmm(pre_kpad, u, cols, vals)
+        v = jax.lax.optimization_barrier(v)
+        return spmm(pre_kpad / r_sel[:, None], v, cols)
+    if impl == "kernel":
+        from repro.kernels import ops
+        return ops.sddmm_spmm_type1(pre_kpad, r_sel, u, cols, vals)
+    raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+
+
+def _final(impl: str, k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
+           cols: jax.Array, vals: jax.Array) -> jax.Array:
+    if impl == "kernel":
+        from repro.kernels import ops
+        return ops.sddmm_spmm_type2(k_pad, km_pad, u, cols, vals)
+    return sddmm_spmm_type2(k_pad, km_pad, u, cols, vals)
+
+
+# ---------------------------------------------------------------------------
+# Full solver
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "impl"))
+def sinkhorn_wmd_sparse(sel_idx: jax.Array, r_sel: jax.Array,
+                        cols: jax.Array, vals: jax.Array, vecs: jax.Array,
+                        lamb: float, max_iter: int,
+                        impl: str = "fused") -> jax.Array:
+    """Sparse PASWD Sinkhorn-WMD. Returns (N,) distances.
+
+    Args:
+      sel_idx: (v_r,) nonzero-word indices of the query (host-selected).
+      r_sel:   (v_r,) normalized query frequencies.
+      cols:    (N, nnz_max) ELL word ids (pad == V).
+      vals:    (N, nnz_max) ELL normalized counts (pad == 0).
+      vecs:    (V, w) embeddings.
+      impl:    "fused" | "unfused" | "kernel".
+    """
+    pre = precompute(sel_idx, r_sel, vecs, lamb)
+    return sinkhorn_wmd_sparse_pre(pre, cols, vals, max_iter, impl)
+
+
+def sinkhorn_wmd_sparse_pre(pre: SinkhornPrecompute, cols: jax.Array,
+                            vals: jax.Array, max_iter: int,
+                            impl: str = "fused") -> jax.Array:
+    """Solver core on precomputed matrices (shared with the distributed path)."""
+    k_pad = pad_k(pre.K)
+    km_pad = pad_k(pre.KM)
+    v_r = pre.r.shape[0]
+    n = cols.shape[0]
+    x0 = jnp.full((v_r, n), 1.0 / v_r, dtype=pre.K.dtype)
+
+    def body(_, x):
+        return _iteration(impl, k_pad, pre.r, x, cols, vals)
+
+    x = jax.lax.fori_loop(0, max_iter, body, x0)
+    u = safe_recip(x)
+    return _final(impl, k_pad, km_pad, u, cols, vals)

@@ -1,0 +1,5 @@
+"""Data pipelines: synthetic WMD corpus + LM token batches."""
+from repro.data.corpus import WMDData, make_corpus
+from repro.data.tokens import TokenPipeline, batch_struct
+
+__all__ = ["WMDData", "make_corpus", "TokenPipeline", "batch_struct"]

@@ -1,0 +1,4 @@
+"""Distribution substrate: partitioning rules, fault tolerance, elasticity."""
+from repro.distributed import elastic, fault_tolerance, partitioning
+
+__all__ = ["elastic", "fault_tolerance", "partitioning"]

@@ -1,0 +1,29 @@
+"""Elastic mesh derivation: pick a (pod, data, model) factoring for whatever
+device count survives. Configs use named axes only, so any factoring works;
+checkpoint restore re-shards (checkpointer.restore with new shardings)."""
+from __future__ import annotations
+
+import jax
+
+
+def remesh(num_devices: int, *, model_parallelism: int = 16,
+           pod_size: int = 256):
+    """Largest usable mesh for ``num_devices``:
+    pods = devices // pod_size (multi-pod if >= 2), model = requested TP
+    (reduced to the largest divisor that fits), data = the rest. Drops
+    remainder devices (they become hot spares)."""
+    model = model_parallelism
+    while model > 1 and num_devices % model:
+        model //= 2
+    usable = num_devices - (num_devices % model)
+    chips = usable
+    pods = max(chips // pod_size, 1) if chips >= 2 * pod_size else 1
+    while pods > 1 and (chips % pods or (chips // pods) % model):
+        pods -= 1
+    data = chips // (pods * model)
+    shape = (pods, data, model) if pods > 1 else (data, model)
+    names = ("pod", "data", "model") if pods > 1 else ("data", "model")
+    devices = jax.devices()[:pods * data * model]
+    import numpy as np
+    arr = np.array(devices).reshape(shape)
+    return jax.sharding.Mesh(arr, names)

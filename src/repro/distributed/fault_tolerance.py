@@ -1,0 +1,85 @@
+"""Launcher-level fault tolerance: heartbeats, failure detection, respawn.
+
+On a real multi-pod deployment each host runs a `HeartbeatMonitor`; the
+coordinator applies the policy below. This container is single-host, so the
+protocol is exercised by unit tests with simulated clocks/failures -- the
+*code path* (detection thresholds, respawn decisions, elastic re-mesh) is
+what the tests pin down.
+
+Protocol (DESIGN.md section 7):
+  1. every host POSTs a heartbeat (step, timestamp) each train step;
+  2. a host silent for ``timeout_s`` is declared dead; the coordinator
+     decides: respawn-in-place (transient) vs shrink (hardware loss);
+  3. on shrink, `elastic.remesh` picks the largest valid (pod, data, model)
+     factoring of the surviving device count, and training resumes from the
+     latest checkpoint (checkpointer restores onto the new mesh);
+  4. stragglers (> factor x median step time) are respawn candidates after
+    ``straggler_strikes`` consecutive slow steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class HostStatus:
+    host_id: int
+    last_step: int = -1
+    last_seen: float = 0.0
+    slow_strikes: int = 0
+    alive: bool = True
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    timeout_s: float = 60.0
+    straggler_factor: float = 2.0
+    straggler_strikes: int = 3
+
+
+class HeartbeatMonitor:
+    """Coordinator-side view of the fleet."""
+
+    def __init__(self, num_hosts: int, policy: FaultPolicy = FaultPolicy(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy
+        self.clock = clock
+        self.hosts = {h: HostStatus(host_id=h, last_seen=clock())
+                      for h in range(num_hosts)}
+        self.median_step_s: Optional[float] = None
+
+    def heartbeat(self, host_id: int, step: int,
+                  step_seconds: Optional[float] = None) -> None:
+        st = self.hosts[host_id]
+        st.last_step = step
+        st.last_seen = self.clock()
+        st.alive = True
+        if step_seconds is not None and self.median_step_s:
+            if step_seconds > self.policy.straggler_factor \
+                    * self.median_step_s:
+                st.slow_strikes += 1
+            else:
+                st.slow_strikes = 0
+
+    def set_median_step(self, seconds: float) -> None:
+        self.median_step_s = seconds
+
+    def dead_hosts(self) -> list[int]:
+        now = self.clock()
+        out = []
+        for st in self.hosts.values():
+            if st.alive and now - st.last_seen > self.policy.timeout_s:
+                st.alive = False
+                out.append(st.host_id)
+        return out
+
+    def respawn_candidates(self) -> list[int]:
+        return [st.host_id for st in self.hosts.values()
+                if st.alive
+                and st.slow_strikes >= self.policy.straggler_strikes]
+
+    def surviving(self) -> int:
+        self.dead_hosts()
+        return sum(st.alive for st in self.hosts.values())

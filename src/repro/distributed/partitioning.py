@@ -1,0 +1,250 @@
+"""Parameter / activation sharding rules (GSPMD, named-axis only).
+
+Scheme (DESIGN.md section 4.2):
+  * ``model`` axis: tensor parallelism -- attention heads, FFN hidden, MoE
+    expert hidden, vocab dim of the embedding table.
+  * ``data`` axis: FSDP -- the non-TP axis of every large matrix is sharded
+    over data too (params + AdamW moments), which is what fits mixtral-8x22b
+    (141B x 12B/param of train state) on a 256-chip pod.
+  * ``pod`` axis: pure DP across pods -- params are NOT sharded over pod, so
+    the only cross-pod traffic is the gradient all-reduce (hierarchical
+    FSDP-in-pod / DP-across-pod, the standard multi-pod layout; int8
+    compression hooks in optim.compression).
+
+Rules are by leaf *name* and rank; scanned-unit stacking (extra leading axes)
+is handled by left-padding the spec with None. Everything is expressed with
+named axes only, so any (pod, data, model) mesh factoring works (elastic
+re-shard on restore).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# leaf-name -> base spec (by decreasing specificity)
+_RULES: dict[str, P] = {
+    # embeddings
+    "embed": P("model", "data"),          # (V, D): vocab TP + d FSDP
+    "unembed": P("data", "model"),        # (D, V)
+    "pos": P(None, "data"),
+    "enc_pos": P(None, "data"),
+    "frame_adapter": P("data", "model"),
+    # attention
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    # mla
+    "wq_down": P("data", None),
+    "wq_up": P(None, "model"),
+    "wkv_down": P("data", None),
+    "wkv_up": P(None, "model"),
+    # mlp
+    "wi_gate": P("data", "model"),
+    "wi_up": P("data", "model"),
+    "wi": P("data", "model"),
+    "bi": P("model"),
+    "bo": P("data"),
+    # moe (3D expert weights get the extra expert axis unsharded)
+    "router": P("data", None),
+    # rglru / xlstm
+    "w_gate": P("data", "model"),
+    "w_in": P("data", "model"),
+    "w_up": P("data", "model"),
+    "w_a": P("model", "data"),
+    "w_x": P("model", "data"),
+    "w_out": P("model", "data"),
+    "w_down": P("model", "data"),
+    "w_if": P("data", None),
+    "w": P("data", "model"),
+    "conv_w": P(None, "model"),
+}
+
+# MoE expert tensors are 3D -- matched by name with explicit 3D specs
+_RULES_3D: dict[str, P] = {
+    "wi_gate": P(None, "data", "model"),
+    "wi_up": P(None, "data", "model"),
+    "wo": P(None, "model", "data"),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return str(entry.name)
+    return ""
+
+
+def spec_for(path, leaf) -> P:
+    name = _leaf_name(path)
+    ndim = getattr(leaf, "ndim", 0)
+    base = None
+    if ndim >= 3 and name in _RULES_3D:
+        base = _RULES_3D[name]
+    elif name in _RULES:
+        base = _RULES[name]
+    if base is None:
+        return P(*([None] * ndim))
+    pad = ndim - len(base)
+    if pad < 0:  # rank-reduced leaf (e.g. biases sharing a rule name)
+        return P(*([None] * ndim))
+    return P(*([None] * pad), *base)
+
+
+def sanitize_spec(mesh: Mesh, spec: P, shape) -> P:
+    """Drop axis assignments whose dimension is not evenly divisible.
+
+    Explicit jit in/out shardings require even divisibility (unlike
+    with_sharding_constraint); any dim that does not divide by its mesh-axis
+    product falls back to replication on that dim -- e.g. minicpm3's vocab
+    73448 over model=16, mixtral's 8 kv heads over 16 chips, or long_500k's
+    batch=1 over (pod, data).
+    """
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        factor = 1
+        for a in axes:
+            factor *= mesh.shape[a]
+        out.append(entry if shape[i] % factor == 0 else None)
+    # pad missing trailing dims
+    out += [None] * (len(shape) - len(out))
+    return P(*out)
+
+
+def param_specs(params: Any) -> Any:
+    """Pytree of PartitionSpecs mirroring ``params``."""
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(mesh: Mesh, params: Any) -> Any:
+    return jax.tree.map(
+        lambda s, leaf: NamedSharding(
+            mesh, sanitize_spec(mesh, s, getattr(leaf, "shape", ()))),
+        param_specs(params), params)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that shard the global batch (pod first if present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def batch_spec(mesh: Mesh, ndim: int) -> P:
+    """Batch tensors: leading axis over (pod, data), rest replicated."""
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, batch: Any) -> Any:
+    return jax.tree.map(
+        lambda x: NamedSharding(
+            mesh, sanitize_spec(mesh, batch_spec(mesh, x.ndim), x.shape)),
+        batch)
+
+
+def cache_shardings(mesh: Mesh, cache: Any) -> Any:
+    """Decode-cache shardings, type-aware.
+
+    * attention KVCache k/v (B, S, KV, hd): batch over (pod, data), KV heads
+      over ``model`` (GSPMD ceil-shards when KV < model size -- e.g.
+      starcoder2's 2 kv heads over 16 chips leaves 14 chips padding that
+      head axis, which is still 16x less memory than replication). MQA
+      (KV == 1) caches replicate over model (nothing to shard).
+    * MLA latent caches (shared across heads): batch only -- the latent is
+      MLA's point and cannot shard by head. (Sequence-sharded attention for
+      these is the decode hillclimb; see EXPERIMENTS.md §Perf.)
+    * recurrent states (RG-LRU / xLSTM): batch over (pod, data); mLSTM's
+      (B, H, hd, hd) matrix state also shards heads over ``model``.
+    * scalars (pos, m) and tiny leaves: replicated.
+
+    Works on pytrees of ShapeDtypeStructs (eval_shape output) because the
+    NamedTuple containers are preserved -- dispatch is isinstance-based.
+    """
+    from repro.models.layers.attention import KVCache
+    from repro.models.layers.mla import MLACache
+    from repro.models.layers.rglru import RGLRUState
+    from repro.models.layers.xlstm import MLSTMState, SLSTMState
+
+    axes = batch_axes(mesh)
+    model_size = mesh.shape.get("model", 1)
+
+    def pad(spec_tail, leaf, base_ndim):
+        """Left-pad with None for stacked (scanned-unit) leading axes, then
+        sanitize against the leaf's actual shape."""
+        extra = getattr(leaf, "ndim", 0) - base_ndim
+        spec = P(*([None] * extra), *spec_tail)
+        return NamedSharding(
+            mesh, sanitize_spec(mesh, spec, getattr(leaf, "shape", ())))
+
+    ns = pad  # alias for readability below
+
+    def walk(node):
+        if isinstance(node, KVCache):
+            kv_heads = node.k.shape[-2]
+            buf = node.k.shape[-3]
+            if kv_heads % model_size == 0:
+                # TP over kv heads (olmo, deepseek)
+                kv_spec = (axes, None, "model", None)
+            elif buf % model_size == 0:
+                # sequence-sharded cache (mixtral kv=8, starcoder2 kv=2,
+                # MQA): decode attention becomes flash-decode style, GSPMD
+                # inserts the partial-softmax collectives
+                kv_spec = (axes, "model", None, None)
+            else:
+                kv_spec = (axes, None, None, None)
+            return KVCache(k=pad(kv_spec, node.k, 4),
+                           v=pad(kv_spec, node.v, 4),
+                           pos=pad((), node.pos, 0))
+        if isinstance(node, MLACache):
+            # the latent is shared across heads (cannot head-shard); shard
+            # the sequence dim over model when divisible
+            seq = node.c_kv.shape[-2]
+            sspec = "model" if seq % model_size == 0 else None
+            return MLACache(c_kv=pad((axes, sspec, None), node.c_kv, 3),
+                            k_rope=pad((axes, sspec, None), node.k_rope, 3),
+                            pos=pad((), node.pos, 0))
+        if isinstance(node, RGLRUState):
+            return RGLRUState(h=pad((axes, "model"), node.h, 2),
+                              conv=pad((axes, None, "model"), node.conv, 3),
+                              pos=pad((), node.pos, 0))
+        if isinstance(node, MLSTMState):
+            # heads rarely divide the model axis; shard the head_dim rows of
+            # the matrix state instead (sanitizer drops whatever won't fit)
+            h = node.c.shape[-3]
+            hspec = "model" if h % model_size == 0 else None
+            dspec = "model" if hspec is None else None
+            return MLSTMState(c=pad((axes, hspec, dspec, None), node.c, 4),
+                              n=pad((axes, hspec, dspec), node.n, 3),
+                              m=pad((axes, None), node.m, 2),
+                              conv=pad((axes, None, None), node.conv, 3),
+                              pos=pad((), node.pos, 0))
+        if isinstance(node, SLSTMState):
+            return SLSTMState(h=pad((axes, "model"), node.h, 2),
+                              c=pad((axes, "model"), node.c, 2),
+                              n=pad((axes, "model"), node.n, 2),
+                              m=pad((axes, "model"), node.m, 2),
+                              pos=pad((), node.pos, 0))
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if k in ("cross_k", "cross_v"):   # (L, B, Tenc, KV, hd)
+                    out[k] = pad((axes, None, "model", None), v, 4)
+                elif k == "pos":
+                    out[k] = pad((), v, 0)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        # bare leaf fallback: batch-shard axis 0 if it looks batch-like
+        ndim = getattr(node, "ndim", 0)
+        return ns(*([None] * ndim))
+
+    return walk(cache)

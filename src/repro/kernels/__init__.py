@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the Sinkhorn-WMD hot spots.
+
+  sddmm_spmm -- the paper's contribution: fused sampled-dense-dense +
+                sparse-dense matmul (type1: iteration, type2: final distance)
+  cdist      -- euclidean transportation-cost matrix (MXU matmul expansion)
+  kexp       -- beyond-paper fused cdist -> (K, K.*M) precompute
+
+`ops` holds the jit'd public wrappers (padding + CPU-interpret dispatch);
+`ref` holds the deliberately naive jnp oracles used by the kernel tests.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

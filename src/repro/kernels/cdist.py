@@ -1,0 +1,51 @@
+"""Pallas TPU kernel for the euclidean transportation-cost matrix (paper
+hotspot: ``M = cdist(vecs[sel], vecs)``, Table I / Fig. 7).
+
+MXU form (DESIGN.md section 2): |a-b|^2 = |a|^2 + |b|^2 - 2 a.b routes the
+O(v_r * V * w) work through the systolic array. The grid tiles the vocab axis;
+the (small) query-side matrix ``a`` stays VMEM-resident across all steps.
+
+Tile sizing: v_tile defaults to 512 so a (512, 300) f32 embedding tile plus
+the (v_r, 512) output tile stay well under VMEM; both 512 and the padded
+embedding width are 128-lane aligned for MXU occupancy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdist_kernel(a_ref, b_ref, out_ref, *, squared: bool):
+    a = a_ref[...]                       # (v_r, w) resident
+    b = b_ref[...]                       # (v_tile, w)
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    # MXU: contract over the embedding width.
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=out_ref.dtype)
+    d2 = jnp.maximum(a2 + b2 - 2.0 * ab, 0.0)
+    out_ref[...] = d2 if squared else jnp.sqrt(d2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("v_tile", "squared", "interpret"))
+def cdist(a: jax.Array, b: jax.Array, *, v_tile: int = 512,
+          squared: bool = False, interpret: bool = False) -> jax.Array:
+    """Pairwise distance a (v_r, w) vs b (V, w) -> (v_r, V). V % v_tile == 0."""
+    v_r, w = a.shape
+    v, _ = b.shape
+    grid = (v // v_tile,)
+    return pl.pallas_call(
+        functools.partial(_cdist_kernel, squared=squared),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_r, w), lambda i: (0, 0)),
+            pl.BlockSpec((v_tile, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((v_r, v_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((v_r, v), a.dtype),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,63 @@
+"""Fused cdist -> (K, K.*M) precompute kernel (beyond-paper fusion).
+
+The paper precomputes M, K = exp(-lambda M), K_over_r and K.*M as separate
+passes (Fig. 4 ``precompute_matrices``). Each pass round-trips a (v_r, V)
+matrix through memory. This kernel fuses the whole precompute: each vocab
+tile's distance block is produced in VMEM (MXU matmul expansion, as in
+`kernels.cdist`), exponentiated and scaled in-register, and only the two
+matrices the solver actually reads (K and K.*M) are written to HBM. M itself
+never exists in memory -- a pure TPU-side win the CPU paper could not take
+because its K/KM layouts are row-scaled on the fly instead.
+
+Saves, per precompute: one (v_r, V) store + one load of M, and one full
+elementwise pass -- at dbpedia scale (32 x 100k f32) ~25 MB of traffic per
+query, i.e. the precompute memory term drops by ~1/3 (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kexp_kernel(a_ref, b_ref, k_ref, km_ref, *, lamb: float):
+    a = a_ref[...]
+    b = b_ref[...]
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    ab = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=k_ref.dtype)
+    m = jnp.sqrt(jnp.maximum(a2 + b2 - 2.0 * ab, 0.0))  # never leaves VMEM
+    k = jnp.exp(-lamb * m)
+    k_ref[...] = k
+    km_ref[...] = k * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lamb", "v_tile", "interpret"))
+def cdist_kexp(a: jax.Array, b: jax.Array, *, lamb: float,
+               v_tile: int = 512, interpret: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """Fused precompute: a (v_r, w), b (V, w) -> (K, K.*M), each (v_r, V)."""
+    v_r, w = a.shape
+    v, _ = b.shape
+    grid = (v // v_tile,)
+    return pl.pallas_call(
+        functools.partial(_kexp_kernel, lamb=lamb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_r, w), lambda i: (0, 0)),
+            pl.BlockSpec((v_tile, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((v_r, v_tile), lambda i: (0, i)),
+            pl.BlockSpec((v_r, v_tile), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v_r, v), a.dtype),
+            jax.ShapeDtypeStruct((v_r, v), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, b)

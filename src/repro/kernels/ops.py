@@ -1,0 +1,118 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Responsibilities:
+  * backend dispatch -- ``interpret=True`` everywhere except real TPU, so the
+    same call sites validate on CPU (this container) and run Mosaic on TPU;
+  * alignment padding -- v_r to the f32 sublane multiple (8), docs to the
+    doc-tile, so callers never think about hardware shapes;
+  * the vocab-chunked driver (`sddmm_spmm_chunked`) that replays the
+    multi-chip vocab decomposition on one chip when K does not fit VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cdist as _cdist_kernel
+from repro.kernels import kexp as _kexp_kernel
+from repro.kernels import sddmm_spmm as _sddmm_spmm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def sddmm_spmm_type1(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
+                     cols: jax.Array, vals: jax.Array, *,
+                     docs_blk: int = 8) -> jax.Array:
+    """Fused Sinkhorn iteration body; see kernels.sddmm_spmm.
+
+    Pads v_r to 8 (r pads with 1.0 to keep 1/r finite) and docs to docs_blk;
+    un-pads the result. K's zero pad column must already be present.
+    """
+    v_r, n = u.shape
+    k_p = _pad_to(k_pad, 0, 8)
+    r_p = _pad_to(r_sel, 0, 8, value=1.0)
+    u_p = _pad_to(_pad_to(u, 0, 8), 1, docs_blk)
+    # padded docs gather the K pad column (id Vloc) with val 0 -> contribute 0
+    cols_p = _pad_to(cols, 0, docs_blk, value=k_pad.shape[1] - 1)
+    vals_p = _pad_to(vals, 0, docs_blk)
+    x = _sddmm_spmm.sddmm_spmm_type1(
+        k_p, r_p, u_p, cols_p, vals_p,
+        docs_blk=docs_blk, interpret=_interpret())
+    return x[:v_r, :n]
+
+
+def sddmm_spmm_type2(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
+                     cols: jax.Array, vals: jax.Array, *,
+                     docs_blk: int = 8) -> jax.Array:
+    """Fused final-distance kernel; returns (N,) WMD."""
+    v_r, n = u.shape
+    k_p = _pad_to(k_pad, 0, 8)
+    km_p = _pad_to(km_pad, 0, 8)
+    u_p = _pad_to(_pad_to(u, 0, 8), 1, docs_blk)
+    cols_p = _pad_to(cols, 0, docs_blk, value=k_pad.shape[1] - 1)
+    vals_p = _pad_to(vals, 0, docs_blk)
+    wmd = _sddmm_spmm.sddmm_spmm_type2(
+        k_p, km_p, u_p, cols_p, vals_p,
+        docs_blk=docs_blk, interpret=_interpret())
+    return wmd[:n]
+
+
+def sddmm_spmm_chunked(k_chunks: jax.Array, r_sel: jax.Array, u: jax.Array,
+                       cols_chunks: jax.Array, vals_chunks: jax.Array, *,
+                       docs_blk: int = 8) -> jax.Array:
+    """Single-chip driver for K too large for VMEM: vocab-chunked type1.
+
+    Args mirror the multi-chip layout (`core.formats.rebucket_for_vocab_shards`):
+      k_chunks:    (S, v_r, Vc+1) -- per-chunk K slice with zero pad column.
+      cols_chunks: (S, N, nnz_c)  -- localized ids per chunk.
+      vals_chunks: (S, N, nnz_c)
+    Partial x contributions are summed across chunks (the psum of the
+    distributed engine becomes an on-chip accumulation).
+    """
+    def chunk(carry, operand):
+        k_c, cols_c, vals_c = operand
+        x_c = sddmm_spmm_type1(k_c, jnp.ones_like(r_sel), u, cols_c, vals_c,
+                               docs_blk=docs_blk)
+        return carry + x_c, None
+
+    v_r, n = u.shape
+    x0 = jnp.zeros((v_r, n), u.dtype)
+    x, _ = jax.lax.scan(chunk, x0, (k_chunks, cols_chunks, vals_chunks))
+    return x / r_sel[:, None]
+
+
+def cdist(a: jax.Array, b: jax.Array, *, v_tile: int = 512,
+          squared: bool = False) -> jax.Array:
+    """Tiled euclidean distance. Pads V to v_tile and w to 128 lanes."""
+    v = b.shape[0]
+    a_p = _pad_to(a, 1, 128)
+    b_p = _pad_to(_pad_to(b, 1, 128), 0, v_tile)
+    v_r = a.shape[0]
+    a_p = _pad_to(a_p, 0, 8)
+    out = _cdist_kernel.cdist(a_p, b_p, v_tile=v_tile, squared=squared,
+                              interpret=_interpret())
+    return out[:v_r, :v]
+
+
+def cdist_kexp(a: jax.Array, b: jax.Array, *, lamb: float,
+               v_tile: int = 512) -> tuple[jax.Array, jax.Array]:
+    """Fused precompute -> (K, K.*M), un-padded to (v_r, V)."""
+    v = b.shape[0]
+    v_r = a.shape[0]
+    a_p = _pad_to(_pad_to(a, 1, 128), 0, 8)
+    b_p = _pad_to(_pad_to(b, 1, 128), 0, v_tile)
+    k, km = _kexp_kernel.cdist_kexp(a_p, b_p, lamb=lamb, v_tile=v_tile,
+                                    interpret=_interpret())
+    return k[:v_r, :v], km[:v_r, :v]

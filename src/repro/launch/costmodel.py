@@ -1,0 +1,298 @@
+"""Cost model for the roofline: exact-trip-count FLOPs/bytes + HLO collectives.
+
+Why not just ``compiled.cost_analysis()``: XLA's HLO cost analysis counts a
+while-loop body ONCE regardless of trip count (verified empirically on this
+container -- a 10-iteration scan of a matmul reports 1 matmul of FLOPs).
+Every model here runs its layer stack under lax.scan, so raw cost_analysis
+would under-report FLOPs by ~num_layers. Two complementary fixes:
+
+1. **jaxpr walker** (`jaxpr_cost`): traverses the *traced* jaxpr where scan
+   lengths are static. FLOPs: dot_general/conv counted exactly (2*M*N*K),
+   elementwise ops ~1 flop/element. HBM bytes: operands+outputs of
+   data-motion-dominant ops (dot, conv, gather, scatter, reduce, rng),
+   elementwise ops assumed fused (skipped). This is a fusion-optimistic
+   HBM model -- documented in EXPERIMENTS.md §Roofline methodology. These
+   are LOGICAL (global) numbers; per-chip = /chips under even sharding.
+
+2. **HLO collective parser** (`collective_bytes`): walks
+   ``compiled.as_text()``, builds the computation call graph with while
+   ``known_trip_count`` multipliers (scan bodies carry them), and sums
+   wire bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+   collective-permute with ring-transfer factors ((g-1)/g, 2(g-1)/g for AR).
+   SPMD HLO shapes are PER-DEVICE, so the result is per-device wire bytes --
+   the collective roofline term divides by link bandwidth only (the chips
+   factor in the assignment formula cancels; shown in EXPERIMENTS.md).
+
+Raw cost_analysis numbers are reported alongside for transparency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# jaxpr walker
+# ---------------------------------------------------------------------------
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh", "logistic",
+    "rsqrt", "sqrt", "pow", "neg", "abs", "floor", "ceil", "round", "sign",
+    "erf", "cos", "sin", "integer_pow", "select_n", "clamp", "nextafter",
+    "rem", "atan2", "expm1", "log1p", "cbrt", "square",
+}
+_BYTES_OPS = {
+    "dot_general", "conv_general_dilated", "gather", "scatter", "scatter-add",
+    "scatter_add", "dynamic_slice", "dynamic_update_slice", "reduce_sum",
+    "reduce_max", "reduce_min", "reduce_prod", "argmax", "argmin", "sort",
+    "cumsum", "cumlogsumexp", "cummax", "top_k", "iota", "broadcast_in_dim",
+}
+# shard_map collectives visible at jaxpr level
+_JAXPR_COLLECTIVES = {"psum", "all_gather", "all_to_all", "ppermute",
+                      "psum_scatter", "pmax", "pmin"}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0   # jaxpr-level (shard_map) only
+    unknown_loops: int = 0
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.collective_bytes + o.collective_bytes,
+                    self.unknown_loops + o.unknown_loops)
+
+    def __mul__(self, k: float):
+        return Cost(self.flops * k, self.bytes * k,
+                    self.collective_bytes * k, self.unknown_loops)
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape) * aval.dtype.itemsize)
+    except Exception:
+        return 0.0
+
+
+def _aval_elems(aval) -> float:
+    try:
+        return float(np.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    batch = np.prod([lhs.shape[i] for i in lb]) if lb else 1.0
+    contract = np.prod([lhs.shape[i] for i in lc]) if lc else 1.0
+    m = np.prod([lhs.shape[i] for i in range(lhs.ndim)
+                 if i not in lc and i not in lb]) or 1.0
+    n = np.prod([rhs.shape[i] for i in range(rhs.ndim)
+                 if i not in rc and i not in rb]) or 1.0
+    return 2.0 * float(batch) * float(m) * float(n) * float(contract)
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval                 # kernel
+    groups = eqn.params.get("feature_group_count", 1)
+    k_elems = np.prod(rhs.shape)             # O*I/g*spatial
+    out_spatial_batch = np.prod(out.shape) / out.shape[
+        eqn.params["dimension_numbers"].out_spec[1]] \
+        if hasattr(eqn.params["dimension_numbers"], "out_spec") else \
+        np.prod(out.shape)
+    # conservative: 2 * out_elems * (kernel_elems / out_features)
+    return 2.0 * float(np.prod(out.shape)) * float(k_elems) \
+        / max(float(rhs.shape[0]), 1.0) / groups
+
+
+def jaxpr_cost(jaxpr) -> Cost:
+    """Walk a (closed) jaxpr; multiply scan bodies by their length."""
+    if hasattr(jaxpr, "jaxpr"):
+        jaxpr = jaxpr.jaxpr
+    total = Cost()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += Cost(flops=_dot_flops(eqn),
+                          bytes=sum(_aval_bytes(v.aval) for v in eqn.invars)
+                          + sum(_aval_bytes(v.aval) for v in eqn.outvars))
+        elif prim == "conv_general_dilated":
+            total += Cost(flops=_conv_flops(eqn),
+                          bytes=sum(_aval_bytes(v.aval) for v in eqn.invars)
+                          + sum(_aval_bytes(v.aval) for v in eqn.outvars))
+        elif prim == "scan":
+            body = jaxpr_cost(eqn.params["jaxpr"])
+            total += body * float(eqn.params["length"])
+        elif prim == "while":
+            body = jaxpr_cost(eqn.params["body_jaxpr"])
+            cond = jaxpr_cost(eqn.params["cond_jaxpr"])
+            got = body + cond
+            got.unknown_loops += 1
+            total += got
+        elif prim in ("cond", "switch"):
+            branches = [jaxpr_cost(b) for b in eqn.params["branches"]]
+            total += max(branches, key=lambda c: c.flops) if branches \
+                else Cost()
+        elif prim in _JAXPR_COLLECTIVES:
+            nbytes = sum(_aval_bytes(v.aval) for v in eqn.invars)
+            total += Cost(bytes=nbytes, collective_bytes=nbytes)
+        elif prim in _ELEMENTWISE:
+            total += Cost(flops=_aval_elems(eqn.outvars[0].aval))
+        elif prim in _BYTES_OPS:
+            total += Cost(bytes=sum(_aval_bytes(v.aval) for v in eqn.invars)
+                          + sum(_aval_bytes(v.aval) for v in eqn.outvars))
+        else:
+            # generic recursion: any primitive carrying sub-jaxprs (pjit,
+            # remat2, custom_vjp_call, shard_map, ...) is walked x1.
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr") or hasattr(v, "eqns"):
+                    total += jaxpr_cost(v)
+                elif isinstance(v, (list, tuple)):
+                    for b in v:
+                        if hasattr(b, "jaxpr") or hasattr(b, "eqns"):
+                            total += jaxpr_cost(b)
+        # remaining ops (reshape/transpose/convert): assumed fused / free
+    return total
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser (per-device wire bytes, trip-count aware)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLED_RE = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=)%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> float:
+    """Total bytes of the first (possibly tuple) shape in ``text``."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        elems = 1.0
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    elems *= int(d)
+        total += elems * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(", line)
+        if m and ("->" in line) and line.rstrip().endswith("{"):
+            current = m.group(1)
+            comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def collective_bytes(hlo: str) -> dict[str, Any]:
+    """Per-device wire bytes of every collective, trip-count multiplied.
+
+    Returns {"total": float, "by_kind": {...}, "unknown_trip_whiles": int}.
+    """
+    comps = _split_computations(hlo)
+
+    # find entry: computation not called by any other
+    called = set()
+    calls: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    unknown_whiles = 0
+    for cname, lines in comps.items():
+        for line in lines:
+            body = None
+            mbody = re.search(r"body=%([\w.\-]+)", line)
+            mcond = re.search(r"condition=%([\w.\-]+)", line)
+            if " while(" in line:
+                mt = _TRIP_RE.search(line)
+                trip = float(mt.group(1)) if mt else 1.0
+                if not mt:
+                    unknown_whiles += 1
+                if mbody:
+                    calls[cname].append((mbody.group(1), trip))
+                    called.add(mbody.group(1))
+                if mcond:
+                    calls[cname].append((mcond.group(1), trip + 1))
+                    called.add(mcond.group(1))
+            else:
+                for target in _CALLED_RE.findall(line):
+                    if target in comps:
+                        calls[cname].append((target, 1.0))
+                        called.add(target)
+    entries = [c for c in comps if c not in called]
+
+    # propagate multipliers (call graph is a DAG)
+    mult: dict[str, float] = {}
+
+    def visit(c: str, m: float):
+        mult[c] = mult.get(c, 0.0) + m
+        for tgt, k in calls.get(c, []):
+            visit(tgt, m * k)
+
+    for e in entries:
+        visit(e, 1.0)
+
+    by_kind = {k: 0.0 for k in _COLL_KINDS}
+    count = {k: 0 for k in _COLL_KINDS}
+    for cname, lines in comps.items():
+        m = mult.get(cname, 1.0)
+        # shape table for operand lookup
+        shapes: dict[str, float] = {}
+        for line in lines:
+            d = _DEF_RE.match(line)
+            if d:
+                shapes[d.group(1)] = _shape_bytes(d.group(2))
+        for line in lines:
+            for kind in _COLL_KINDS:
+                if f" {kind}(" in line or f"{kind}-start(" in line:
+                    d = _DEF_RE.match(line)
+                    out_bytes = _shape_bytes(d.group(2)) if d else 0.0
+                    g = 1
+                    mg = _GROUPS_RE.search(line)
+                    if mg:
+                        g = int(mg.group(2))
+                    else:
+                        mb = _GROUPS_BRACE_RE.search(line)
+                        if mb:
+                            g = len(mb.group(1).split(","))
+                    if g <= 1:
+                        continue
+                    ring = (g - 1) / g
+                    if kind == "all-reduce":
+                        wire = out_bytes * 2 * ring
+                    elif kind == "collective-permute":
+                        wire = out_bytes
+                    else:
+                        wire = out_bytes * ring
+                    by_kind[kind] += wire * m
+                    count[kind] += 1
+    return {"total": sum(by_kind.values()), "by_kind": by_kind,
+            "count": count, "unknown_trip_whiles": unknown_whiles}

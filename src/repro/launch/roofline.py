@@ -1,0 +1,152 @@
+"""Roofline report: three terms per (arch x shape x mesh) from dry-run JSON.
+
+Terms (TPU v5e constants per the assignment):
+  compute    = FLOPs / (chips * 197e12)            [bf16 peak]
+  memory     = HBM bytes / (chips * 819e9)
+  collective = per-device wire bytes / 50e9        [ICI link]
+
+Scoping (see costmodel.py): jaxpr FLOPs/bytes are GLOBAL-logical for pjit
+cells (divided by chips here) but PER-DEVICE for shard_map cells
+(sinkhorn-wmd -- not divided). HLO collective bytes are always per-device
+(SPMD), so the assignment's /chips cancels against the per-chip scope --
+the collective term divides by link bandwidth only.
+
+MODEL_FLOPS = 6*N*D for train (N = active params for MoE), 2*N*D for
+prefill, 2*N*B for decode (one token). The "useful fraction" is
+MODEL_FLOPS / measured FLOPs; the roofline fraction (the §Perf score) is
+model-flops-time / dominant term.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16]
+Writes experiments/roofline_<mesh>.md and prints the table.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments")
+
+
+def model_flops(arch: str, shape: str) -> float:
+    from repro.configs import get_config, get_shape
+    if arch == "sinkhorn-wmd":
+        from repro.configs import sinkhorn_wmd as wmd_cfg
+        cfg = wmd_cfg.config(shape[:-4] if shape.endswith("_opt")
+                             else shape)
+        # cdist (2*v_r*V*w) + t iterations of 2 fused contractions over nnz
+        nnz = cfg.num_docs * 35                   # corpus mean words/doc
+        return (2.0 * cfg.v_r * cfg.vocab_size * cfg.embed_dim
+                + cfg.max_iter * 2 * 2 * nnz * cfg.v_r)
+    cfg = get_config(arch)
+    sh = get_shape(shape)
+    n = cfg.active_param_count()
+    if sh.kind == "train":
+        return 6.0 * n * sh.global_batch * sh.seq_len
+    if sh.kind == "prefill":
+        return 2.0 * n * sh.global_batch * sh.seq_len
+    return 2.0 * n * sh.global_batch              # decode: one token
+
+
+def chips(mesh_name: str) -> int:
+    return 512 if "2x16x16" in mesh_name else 256
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    mesh_name = rec["mesh"]
+    n_chips = chips(mesh_name)
+    jc = rec.get("jaxpr_cost") or {}
+    flops = jc.get("flops", 0.0)
+    bytes_ = jc.get("bytes", 0.0)
+    per_device_scope = rec["arch"] == "sinkhorn-wmd"   # shard_map program
+    div = 1.0 if per_device_scope else float(n_chips)
+    t_compute = flops / div / PEAK_FLOPS
+    t_memory = bytes_ / div / HBM_BW
+    coll = rec.get("collectives") or {}
+    t_coll = float(coll.get("total", 0.0)) / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    t_model = mf / n_chips / PEAK_FLOPS if not per_device_scope \
+        else mf / n_chips / PEAK_FLOPS
+    useful = mf / flops / (1.0 if per_device_scope else 1.0) \
+        if flops else 0.0
+    if per_device_scope:
+        useful = (mf / n_chips) / flops if flops else 0.0
+    dominant = max(terms.values())
+    frac = t_model / dominant if dominant > 0 else 0.0
+    mem_gib = ((rec.get("memory_analysis") or {})
+               .get("temp_size_in_bytes") or 0) / 2 ** 30
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": mesh_name,
+            **{f"t_{k}": v for k, v in terms.items()},
+            "bottleneck": bottleneck, "useful_flops_frac": useful,
+            "roofline_frac": frac, "temp_gib_per_chip": mem_gib,
+            "unknown_loops": jc.get("unknown_loops", 0)}
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def report(mesh_name: str, dryrun_dir: str | None = None) -> str:
+    dryrun_dir = dryrun_dir or os.path.join(OUT_DIR, "dryrun", mesh_name)
+    rows, skips = [], []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") == "skipped":
+            skips.append((rec["arch"], rec["shape"], rec.get("reason", "")))
+            continue
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    lines = [
+        f"### Roofline -- {mesh_name} ({chips(mesh_name)} chips, "
+        "v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s link)",
+        "",
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "useful FLOPs | roofline frac | temp GiB/chip |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute'])} | "
+            f"{fmt_s(r['t_memory'])} | {fmt_s(r['t_collective'])} | "
+            f"**{r['bottleneck']}** | {r['useful_flops_frac']:.2f} | "
+            f"{r['roofline_frac']:.2f} | {r['temp_gib_per_chip']:.2f} |")
+    if skips:
+        lines += ["", "Skipped cells (documented, DESIGN.md section 5):", ""]
+        for a, s, why in skips:
+            lines.append(f"* {a} x {s}: {why}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16",
+                    choices=["pod16x16", "pod2x16x16"])
+    args = ap.parse_args()
+    txt = report(args.mesh)
+    out = os.path.join(OUT_DIR, f"roofline_{args.mesh}.md")
+    with open(out, "w") as f:
+        f.write(txt + "\n")
+    print(txt)
+    print(f"\nwritten: {out}")
+
+
+if __name__ == "__main__":
+    main()

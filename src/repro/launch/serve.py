@@ -1,0 +1,99 @@
+"""Serving launcher: LM decode loop or the Sinkhorn-WMD query service.
+
+``python -m repro.launch.serve --arch sinkhorn-wmd`` serves WMD queries
+(the paper's workload); any other --arch runs prefill + a short batched
+decode loop on the smoke config (real configs need real hardware).
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--num-queries", type=int, default=4)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--mesh", default="")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import time
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.launch.mesh import make_mesh
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(shape) == 2 \
+            else ("pod", "data", "model")
+    else:
+        shape, axes = (n_dev, 1), ("data", "model")
+    mesh = make_mesh(shape, axes)
+
+    if args.arch == "sinkhorn-wmd":
+        from repro.configs import sinkhorn_wmd as wmd_cfg
+        from repro.data import make_corpus
+        from repro.serving import WMDService
+        cfg = wmd_cfg.smoke_config() if args.smoke else wmd_cfg.config()
+        data = make_corpus(vocab_size=cfg.vocab_size,
+                           embed_dim=cfg.embed_dim, num_docs=cfg.num_docs,
+                           num_queries=args.num_queries,
+                           query_words=min(cfg.v_r - 1, 19))
+        svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
+        for i, q in enumerate(data.queries):
+            t0 = time.perf_counter()
+            idx, dist = svc.top_k(q, k=5)
+            dt = time.perf_counter() - t0
+            print(f"[serve-wmd] query {i}: top5 docs {idx.tolist()} "
+                  f"d={np.round(dist, 3).tolist()} ({dt * 1e3:.1f} ms)")
+        return
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.models import build_model
+    from repro.models.sharding_hints import activation_sharding
+    from repro.serving import build_serve_fns
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, q_block=16, kv_block=16)
+    max_len = args.prefill_len + args.decode_steps
+    jit_prefill, jit_decode = build_serve_fns(model, mesh, max_len=max_len)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab_size, (args.batch, args.prefill_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.encoder.num_positions
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(args.batch, p, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        f = cfg.encoder.num_positions
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(args.batch, f, cfg.d_model)), jnp.float32)
+    with mesh, activation_sharding(mesh):
+        t0 = time.perf_counter()
+        logits, cache = jit_prefill(args.batch)(params, batch)
+        print(f"[serve] prefill {args.prefill_len} tokens: "
+              f"{(time.perf_counter() - t0) * 1e3:.1f} ms")
+        dec = jit_decode(args.batch)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        t0 = time.perf_counter()
+        for _ in range(args.decode_steps):
+            logits, cache = dec(params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+                .astype(jnp.int32)
+        tok.block_until_ready()
+        dt = time.perf_counter() - t0
+    print(f"[serve] {args.decode_steps} decode steps: {dt * 1e3:.1f} ms "
+          f"({dt / args.decode_steps * 1e3:.2f} ms/tok)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant trainer on whatever devices exist (the production
+mesh needs real hardware; locally use --devices/--mesh to emulate). The
+--arch accepts any assigned architecture; --smoke uses the reduced config.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--router", choices=["topk", "sinkhorn"], default=None,
+                    help="MoE router override (sinkhorn = paper technique)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="emulate N host devices (sets XLA_FLAGS; must be "
+                         "first jax use in the process)")
+    ap.add_argument("--mesh", default="",
+                    help="e.g. 4x2 -> (data=4, model=2)")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import dataclasses
+    import jax
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import TokenPipeline
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+    from repro.optim import adamw, warmup_cosine
+    from repro.train import Trainer
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.router and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, router=args.router))
+
+    n_dev = len(jax.devices())
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(shape) == 2 \
+            else ("pod", "data", "model")
+    else:
+        shape, axes = (n_dev, 1), ("data", "model")
+    mesh = make_mesh(shape, axes)
+    print(f"[train] arch={cfg.name} devices={n_dev} mesh={dict(zip(axes, shape))}")
+
+    model = build_model(cfg)
+    opt = adamw(warmup_cosine(args.lr, warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps))
+    pipe = TokenPipeline(cfg, batch=args.batch, seq_len=args.seq_len)
+    trainer = Trainer(model, opt, mesh, pipe, ckpt_dir=args.ckpt_dir,
+                      microbatches=args.microbatches,
+                      grad_compression=args.grad_compression,
+                      ckpt_every=args.ckpt_every)
+    out = trainer.run(jax.random.PRNGKey(0), args.steps)
+    hist = out["history"]
+    if hist:
+        print(f"[train] done: step {hist[-1]['step']} "
+              f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+              f"stragglers={out['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model stack: layers, decoder-only LM, enc-dec, uniform ModelAPI."""
+from repro.models.registry import ModelAPI, build_model, cross_entropy
+
+__all__ = ["ModelAPI", "build_model", "cross_entropy"]

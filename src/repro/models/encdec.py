@@ -1,0 +1,191 @@
+"""Encoder-decoder assembly (whisper-small).
+
+The conv/mel frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings (B, frames, d_model) through a linear adapter.
+Encoder: bidirectional self-attention layers (scanned). Decoder: causal
+self-attention + cross-attention + MLP (scanned). Decode cache holds the
+per-layer self-attention KV ring plus the precomputed cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import attention, embedding, mlp, norms
+
+Params = Any
+Cache = Any
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+        "attn": attention.init(k1, cfg, dtype),
+        "mlp_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+        "mlp": mlp.init(k2, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+        "self_attn": attention.init(k1, cfg, dtype),
+        "cross_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+        "cross_attn": attention.init(k2, cfg, dtype),
+        "mlp_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+        "mlp": mlp.init(k3, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, *, max_positions: int,
+                dtype=jnp.float32) -> Params:
+    enc = cfg.encoder
+    ks = jax.random.split(key, 5)
+    enc_layers = [_enc_layer_init(jax.random.fold_in(ks[0], i), cfg, dtype)
+                  for i in range(enc.num_layers)]
+    dec_layers = [_dec_layer_init(jax.random.fold_in(ks[1], i), cfg, dtype)
+                  for i in range(cfg.num_layers)]
+    return {
+        "embedding": embedding.init(ks[2], cfg, max_positions=max_positions,
+                                    dtype=dtype),
+        "frame_adapter": jax.random.normal(
+            ks[3], (cfg.d_model, cfg.d_model), dtype) * cfg.d_model ** -0.5,
+        "enc_pos": jax.random.normal(
+            ks[4], (enc.num_positions, cfg.d_model), dtype) * 0.02,
+        "encoder": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+        "enc_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+        "decoder": jax.tree.map(lambda *xs: jnp.stack(xs), *dec_layers),
+        "final_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array, *,
+           q_block: int = 512, kv_block: int = 512,
+           remat: bool = True) -> jax.Array:
+    """frames (B, Tenc, D) stub embeddings -> encoder output (B, Tenc, D)."""
+    dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    x = frames.astype(dtype) @ params["frame_adapter"].astype(dtype)
+    x = x + params["enc_pos"].astype(dtype)
+
+    def layer(x, p):
+        xn = norms.apply(cfg.norm_kind, p["attn_norm"], x)
+        x = x + attention.fwd_full(cfg, p["attn"], xn, causal=False,
+                                   q_block=q_block, kv_block=kv_block)
+        xn = norms.apply(cfg.norm_kind, p["mlp_norm"], x)
+        x = x + mlp.apply(cfg.mlp_kind, p["mlp"], xn)
+        return x, None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return norms.apply(cfg.norm_kind, params["enc_norm"], x)
+
+
+def decode_full(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                enc_out: jax.Array, *, q_block: int = 512,
+                kv_block: int = 1024, remat: bool = True) -> jax.Array:
+    """Teacher-forced decoder pass -> hidden states (B, T, D)."""
+    x = embedding.embed(cfg, params["embedding"], tokens)
+
+    def layer(x, p):
+        xn = norms.apply(cfg.norm_kind, p["self_norm"], x)
+        x = x + attention.fwd_full(cfg, p["self_attn"], xn, causal=True,
+                                   q_block=q_block, kv_block=kv_block)
+        xn = norms.apply(cfg.norm_kind, p["cross_norm"], x)
+        x = x + attention.fwd_full(cfg, p["cross_attn"], xn,
+                                   kv_src=enc_out.astype(x.dtype),
+                                   q_block=q_block, kv_block=kv_block)
+        xn = norms.apply(cfg.norm_kind, p["mlp_norm"], x)
+        x = x + mlp.apply(cfg.mlp_kind, p["mlp"], xn)
+        return x, None
+
+    body = jax.checkpoint(layer) if remat else layer
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return norms.apply(cfg.norm_kind, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    enc = cfg.encoder
+    l = cfg.num_layers
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    self_c = attention.init_cache(cfg, batch, max_len, dtype)
+    return {
+        "self": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (l, *x.shape)).copy(), self_c),
+        "cross_k": jnp.zeros((l, batch, enc.num_positions, kv, hd), dtype),
+        "cross_v": jnp.zeros((l, batch, enc.num_positions, kv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, frames: jax.Array,
+            tokens: jax.Array, *, max_len: int, q_block: int = 512,
+            kv_block: int = 1024, cache_dtype=jnp.bfloat16
+            ) -> tuple[jax.Array, Cache]:
+    """Encode + teacher-forced decoder prefill -> (hidden, cache)."""
+    enc_out = encode(cfg, params, frames)
+    x = embedding.embed(cfg, params["embedding"], tokens)
+    t = tokens.shape[1]
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    b = tokens.shape[0]
+
+    def layer(x, p):
+        xn = norms.apply(cfg.norm_kind, p["self_norm"], x)
+        h, (k_all, v_all) = attention.fwd_full(
+            cfg, p["self_attn"], xn, causal=True, q_block=q_block,
+            kv_block=kv_block, return_kv=True)
+        x = x + h
+        self_c = attention.fill_cache(cfg, k_all, v_all, max_len, cache_dtype)
+        xn = norms.apply(cfg.norm_kind, p["cross_norm"], x)
+        dtype = x.dtype
+        ck = (enc_out.astype(dtype)
+              @ p["cross_attn"]["wk"].astype(dtype)).reshape(
+                  b, -1, kv, hd)
+        cv = (enc_out.astype(dtype)
+              @ p["cross_attn"]["wv"].astype(dtype)).reshape(
+                  b, -1, kv, hd)
+        x = x + attention.fwd_full(cfg, p["cross_attn"], xn,
+                                   kv_src=enc_out.astype(dtype),
+                                   q_block=q_block, kv_block=kv_block)
+        xn = norms.apply(cfg.norm_kind, p["mlp_norm"], x)
+        x = x + mlp.apply(cfg.mlp_kind, p["mlp"], xn)
+        return x, (self_c, ck.astype(cache_dtype), cv.astype(cache_dtype))
+
+    x, (self_cs, cks, cvs) = jax.lax.scan(layer, x, params["decoder"])
+    x = norms.apply(cfg.norm_kind, params["final_norm"], x)
+    cache = {"self": self_cs, "cross_k": cks, "cross_v": cvs,
+             "pos": jnp.asarray(t, jnp.int32)}
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                x: jax.Array) -> tuple[jax.Array, Cache]:
+    """One decoder token step on embedded x (B, 1, D)."""
+    def layer(x, inp):
+        p, self_c, ck, cv = inp
+        xn = norms.apply(cfg.norm_kind, p["self_norm"], x)
+        h, self_c = attention.fwd_decode(cfg, p["self_attn"], xn, self_c)
+        x = x + h
+        xn = norms.apply(cfg.norm_kind, p["cross_norm"], x)
+        h, _ = attention.fwd_decode(cfg, p["cross_attn"], xn, self_c,
+                                    cross_kv=(ck, cv))
+        x = x + h
+        xn = norms.apply(cfg.norm_kind, p["mlp_norm"], x)
+        x = x + mlp.apply(cfg.mlp_kind, p["mlp"], xn)
+        return x, self_c
+
+    x, new_self = jax.lax.scan(
+        layer, x, (params["decoder"], cache["self"],
+                   cache["cross_k"], cache["cross_v"]))
+    x = norms.apply(cfg.norm_kind, params["final_norm"], x)
+    new_cache = dict(cache, self=new_self, pos=cache["pos"] + 1)
+    return x, new_cache

@@ -1,0 +1,286 @@
+"""Attention: GQA/MQA, sliding-window / local, prefix-LM, cross-attention.
+
+Two execution paths:
+
+* ``fwd_full`` (train / prefill): **blockwise online-softmax attention**
+  (flash-style, pure JAX). Scores never materialize beyond one
+  (q_block x kv_block) tile -- mandatory for the 32k-prefill shapes, where a
+  full (B, H, T, T) score tensor would be petabytes. The inner loop is a
+  *banded* scan: for query block i, only kv blocks in the causal band
+  [i - band + 1, i] are visited, so windowed attention (mixtral SWA 4096,
+  recurrentgemma local 2048) does near-minimal work with static trip counts.
+  For full causal attention the band covers the whole prefix (the rectangular
+  iteration space costs ~2x the triangle -- a known, measured inefficiency;
+  see EXPERIMENTS.md §Perf for the hillclimb).
+
+* ``fwd_decode`` (serving): one query token against a KV cache.
+  Windowed layers use a **ring-buffer cache** of exactly ``window`` slots --
+  this is what makes long_500k feasible for mixtral (4096-slot cache instead
+  of 500k). RoPE is applied at absolute positions before caching, so the ring
+  wraparound is transparent.
+
+GQA folds the group axis into queries: q (B,T,KV,G,hd) against k (B,S,KV,hd).
+Softmax is computed in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.rope import apply_rope
+from repro.models.sharding_hints import fsdp_use
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, buf_len, KV, hd) -- buf_len = window (ring) or max
+    v: jax.Array
+    pos: jax.Array  # scalar int32: number of tokens already written
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(k1, (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(k2, (d, kv * hd), dtype) * s,
+        "wv": jax.random.normal(k3, (d, kv * hd), dtype) * s,
+        "wo": jax.random.normal(k4, (h * hd, d), dtype) * (h * hd) ** -0.5,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention for train / prefill
+# ---------------------------------------------------------------------------
+
+def _fit_block(t: int, want: int) -> int:
+    """Largest divisor of t that is <= want (handles e.g. whisper's 1500
+    encoder frames against the default 512 block)."""
+    b = min(want, t)
+    while t % b:
+        b -= 1
+    return b
+
+
+def _block_mask(q_idx: jax.Array, k_idx: jax.Array, *, causal: bool,
+                window: int, prefix_len: int) -> jax.Array:
+    """Elementwise visibility for absolute indices q_idx (Tq,1), k_idx (1,Tk)."""
+    if not causal:
+        return jnp.ones((q_idx.shape[0], k_idx.shape[1]), bool)
+    m = k_idx <= q_idx
+    if window > 0:
+        m &= k_idx > (q_idx - window)
+    if prefix_len > 0:
+        # prefix-LM: inside the prefix everything sees everything
+        m |= (k_idx < prefix_len) & (q_idx < prefix_len)
+    return m
+
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: int = 0, prefix_len: int = 0,
+                        q_block: int = 512, kv_block: int = 1024,
+                        q_offset: int = 0) -> jax.Array:
+    """q (B,Tq,KV,G,hd), k/v (B,Tk,KV,hd) -> (B,Tq,KV,G,hd). f32 softmax.
+
+    ``q_offset``: absolute position of q[,0] (prefill continuation support).
+    """
+    b, tq, kvh, g, hd = q.shape
+    tk = k.shape[1]
+    q_block = _fit_block(tq, q_block)
+    kv_block = _fit_block(tk, kv_block)
+    if prefix_len > kv_block:
+        raise ValueError("prefix_len must fit within one kv block")
+    n_q, n_k = tq // q_block, tk // kv_block
+    scale = hd ** -0.5
+
+    if causal:
+        # banded kv visit: blocks [i_k - band + 1, i_k] in kv-block units,
+        # where i_k is the kv block containing this q block's diagonal.
+        if window > 0:
+            # worst-case kv-block span of [q_lo - window + 1, q_hi]: the key
+            # span has length q_block + window - 1 and may straddle an extra
+            # block boundary on each side
+            band = (window + q_block) // kv_block + 2
+        else:
+            band = n_k
+        band = min(band, n_k)
+    else:
+        band = n_k
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, n_q, q_block, kvh, g, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def q_step(_, qi):
+        q_blk = qf[:, qi]                                   # (B,qb,KV,G,hd)
+        q_abs = q_offset + qi * q_block + jnp.arange(q_block)
+        diag_k = (q_offset + (qi + 1) * q_block - 1) // kv_block
+
+        def kv_step(carry, o):
+            m_run, l_run, acc = carry
+            if causal:
+                kj = jnp.maximum(diag_k - band + 1 + o, 0)  # clamped band
+                in_band = (diag_k - band + 1 + o) >= 0
+            else:
+                kj = o                                      # visit every block
+                in_band = jnp.bool_(True)
+            k_blk = jax.lax.dynamic_slice_in_dim(kf, kj * kv_block,
+                                                 kv_block, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(vf, kj * kv_block,
+                                                 kv_block, axis=1)
+            k_abs = kj * kv_block + jnp.arange(kv_block)
+            mask = _block_mask(q_abs[:, None], k_abs[None, :],
+                               causal=causal, window=window,
+                               prefix_len=prefix_len)
+            mask &= in_band
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] \
+                + jnp.einsum("bkgqs,bskh->bkgqh", p, v_blk)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_block, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), jnp.arange(band))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]      # (B,KV,G,qb,hd)
+        return _, out.transpose(0, 3, 1, 2, 4)              # (B,qb,KV,G,hd)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(n_q))
+    # blocks: (n_q, B, qb, KV, G, hd)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, tq, kvh, g, hd)
+    return out.astype(q.dtype)
+
+
+def fwd_full(cfg: ModelConfig, params: dict, x: jax.Array, *,
+             causal: bool = True, prefix_len: int = 0,
+             kv_src: Optional[jax.Array] = None,
+             positions: Optional[jax.Array] = None,
+             q_block: int = 512, kv_block: int = 1024,
+             return_kv: bool = False):
+    """Full-sequence attention (train / prefill). kv_src enables cross-attn.
+    With return_kv, also returns the post-rope (k, v) for cache filling."""
+    b, t, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    dtype = x.dtype
+    src = x if kv_src is None else kv_src
+    tk = src.shape[1]
+    q = (x @ fsdp_use(params["wq"], "wq", dtype)).reshape(b, t, h, hd)
+    k = (src @ fsdp_use(params["wk"], "wk", dtype)).reshape(b, tk, kv, hd)
+    v = (src @ fsdp_use(params["wv"], "wv", dtype)).reshape(b, tk, kv, hd)
+    if cfg.use_rope and kv_src is None:
+        pos = positions if positions is not None else jnp.arange(t)
+        q = apply_rope(q, pos, theta=cfg.rope_theta)
+        k = apply_rope(k, pos, theta=cfg.rope_theta)
+    q = q.reshape(b, t, kv, g, hd)
+    window = cfg.window if cfg.attn_kind in ("swa", "local") else 0
+    out = blockwise_attention(q, k, v, causal=causal and kv_src is None,
+                              window=window, prefix_len=prefix_len,
+                              q_block=q_block, kv_block=kv_block)
+    out = out.reshape(b, t, h * hd)
+    out = out @ fsdp_use(params["wo"], "wo", dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def fill_cache(cfg: ModelConfig, k_all: jax.Array, v_all: jax.Array,
+               max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    """Build a decode cache from prefill K/V (ring layout for windowed)."""
+    b, t, kv, hd = k_all.shape
+    buf = cache_len(cfg, max_len)
+    lastn = min(buf, t)
+    slots = jnp.arange(t - lastn, t) % buf
+    k_buf = jnp.zeros((b, buf, kv, hd), dtype).at[:, slots].set(
+        k_all[:, t - lastn:].astype(dtype))
+    v_buf = jnp.zeros((b, buf, kv, hd), dtype).at[:, slots].set(
+        v_all[:, t - lastn:].astype(dtype))
+    return KVCache(k=k_buf, v=v_buf, pos=jnp.asarray(t, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single token, KV cache; ring buffer for windowed layers)
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    if cfg.attn_kind in ("swa", "local") and cfg.window > 0:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    buf = cache_len(cfg, max_len)
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return KVCache(
+        k=jnp.zeros((batch, buf, kv, hd), dtype),
+        v=jnp.zeros((batch, buf, kv, hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def fwd_decode(cfg: ModelConfig, params: dict, x: jax.Array,
+               cache: KVCache, *,
+               cross_kv: Optional[tuple[jax.Array, jax.Array]] = None
+               ) -> tuple[jax.Array, KVCache]:
+    """One decode step. x: (B, 1, D). Returns (out (B,1,D), new cache).
+
+    cross_kv: precomputed (k, v) from the encoder (whisper decode) -- no
+    cache update, bidirectional over the encoder length.
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = h // kv
+    dtype = x.dtype
+    q = (x @ params["wq"].astype(dtype)).reshape(b, 1, h, hd)
+
+    if cross_kv is not None:
+        k_all, v_all = cross_kv
+        qg = q.reshape(b, kv, g, hd).astype(jnp.float32) * hd ** -0.5
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, k_all.astype(jnp.float32))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskh->bkgh", p, v_all.astype(jnp.float32))
+        out = o.reshape(b, 1, h * hd).astype(dtype)
+        return out @ params["wo"].astype(dtype), cache
+
+    pos = cache.pos                                        # tokens so far
+    k_new = (x @ params["wk"].astype(dtype)).reshape(b, 1, kv, hd)
+    v_new = (x @ params["wv"].astype(dtype)).reshape(b, 1, kv, hd)
+    if cfg.use_rope:
+        p_now = jnp.full((1,), pos, jnp.int32)
+        q = apply_rope(q, p_now, theta=cfg.rope_theta)
+        k_new = apply_rope(k_new, p_now, theta=cfg.rope_theta)
+
+    buf = cache.k.shape[1]
+    slot = jnp.mod(pos, buf)                               # ring slot
+    k_buf = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+    v_buf = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+
+    # absolute position held by each slot after this write
+    s_idx = jnp.arange(buf)
+    abs_pos = pos - jnp.mod(pos - s_idx, buf)              # <= pos
+    valid = abs_pos >= 0
+
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_buf.astype(jnp.float32))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_buf.astype(jnp.float32))
+    out = o.reshape(b, 1, h * hd).astype(dtype)
+    out = out @ params["wo"].astype(dtype)
+    return out, KVCache(k=k_buf, v=v_buf, pos=pos + 1)

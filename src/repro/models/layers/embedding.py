@@ -1,0 +1,48 @@
+"""Token embeddings / logits head (vocab-shardable), learned positions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_hints import (fsdp_use, hint_activations,
+                                         hint_logits)
+
+
+def init(key: jax.Array, cfg: ModelConfig, *, max_positions: int = 0,
+         dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"embed": jax.random.normal(
+        ks[0], (cfg.vocab_size, cfg.d_model), dtype) * cfg.d_model ** -0.5}
+    if not cfg.tie_embeddings:
+        p["unembed"] = jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab_size), dtype) * cfg.d_model ** -0.5
+    if cfg.learned_pos and max_positions:
+        p["pos"] = jax.random.normal(
+            ks[2], (max_positions, cfg.d_model), dtype) * 0.02
+    return p
+
+
+def embed(cfg: ModelConfig, params: dict, tokens: jax.Array,
+          *, positions: jax.Array | None = None,
+          dtype=jnp.bfloat16) -> jax.Array:
+    x = hint_activations(params["embed"][tokens].astype(dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    if cfg.learned_pos and "pos" in params:
+        pos = positions if positions is not None \
+            else jnp.arange(tokens.shape[-1])
+        x = x + params["pos"][pos].astype(dtype)
+    return x
+
+
+def logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        out = x @ fsdp_use(params["embed"], "embed", x.dtype).T
+    else:
+        out = x @ fsdp_use(params["unembed"], "unembed", x.dtype)
+    out = hint_logits(out)
+    if cfg.logit_softcap > 0:
+        cap = cfg.logit_softcap
+        out = cap * jnp.tanh(out.astype(jnp.float32) / cap)
+    return out

@@ -1,0 +1,215 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries go through a low-rank bottleneck (q_lora); keys/values are generated
+from a shared compressed latent c_kv (kv_lora) plus one rope-carrying key
+channel shared across heads. The decode cache stores ONLY (c_kv, k_rope) --
+the latent compression that is MLA's point: cache bytes per token are
+(kv_lora + rope_dim) instead of 2*H*hd.
+
+Two decode variants (the absorbed one is the §Perf hillclimb for the
+decode_32k x minicpm3 cell):
+  * ``fwd_decode``           -- naive: re-expands K/V from the latent for all
+                                cached positions each step
+                                (O(S * kv_lora * H * (nope+v)) FLOPs/step).
+  * ``fwd_decode_absorbed``  -- folds W_uk into the query and W_uv into the
+                                output projection, attending directly in
+                                latent space (O(S * (kv_lora+rope)) per head).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers.rope import apply_rope
+from repro.models.layers.attention import blockwise_attention
+from repro.models.layers import norms
+from repro.models.sharding_hints import fsdp_use
+
+NEG_INF = -1e30
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, S, kv_lora)        compressed latent
+    k_rope: jax.Array  # (B, S, rope_dim)       shared rope key channel
+    pos: jax.Array
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq_down": jax.random.normal(ks[0], (d, m.q_lora_rank), dtype) * s,
+        "q_norm": {"scale": jnp.ones((m.q_lora_rank,), dtype)},
+        "wq_up": jax.random.normal(
+            ks[1], (m.q_lora_rank, h * qk), dtype) * m.q_lora_rank ** -0.5,
+        "wkv_down": jax.random.normal(
+            ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype) * s,
+        "kv_norm": {"scale": jnp.ones((m.kv_lora_rank,), dtype)},
+        "wkv_up": jax.random.normal(
+            ks[3], (m.kv_lora_rank, h * (m.qk_nope_head_dim + m.v_head_dim)),
+            dtype) * m.kv_lora_rank ** -0.5,
+        "wo": jax.random.normal(
+            ks[4], (h * m.v_head_dim, d), dtype) * (h * m.v_head_dim) ** -0.5,
+    }
+
+
+def _project_q(cfg: ModelConfig, params: dict, x: jax.Array,
+               positions: jax.Array):
+    """-> q_nope (B,T,H,nope), q_rope (B,T,H,rope) with rope applied."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b, t, _ = x.shape
+    dtype = x.dtype
+    ql = x @ fsdp_use(params["wq_down"], "wq_down", dtype)
+    ql = norms.apply("rmsnorm", params["q_norm"], ql)
+    q = (ql @ fsdp_use(params["wq_up"], "wq_up", dtype)).reshape(
+        b, t, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(cfg: ModelConfig, params: dict, x: jax.Array,
+                       positions: jax.Array):
+    """-> c_kv (B,T,kv_lora) normalized, k_rope (B,T,rope) with rope."""
+    m = cfg.mla
+    dtype = x.dtype
+    kvd = x @ fsdp_use(params["wkv_down"], "wkv_down", dtype)
+    c_kv = norms.apply("rmsnorm", params["kv_norm"],
+                       kvd[..., :m.kv_lora_rank])
+    k_rope = apply_rope(kvd[..., m.kv_lora_rank:][:, :, None, :],
+                        positions, theta=cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def _expand_kv(cfg: ModelConfig, params: dict, c_kv: jax.Array):
+    """latent -> k_nope (B,S,H,nope), v (B,S,H,v)."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b, s, _ = c_kv.shape
+    kv = (c_kv @ fsdp_use(params["wkv_up"], "wkv_up", c_kv.dtype)).reshape(
+        b, s, h, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+
+def fwd_full(cfg: ModelConfig, params: dict, x: jax.Array, *,
+             positions=None, q_block: int = 512,
+             kv_block: int = 1024, return_latent: bool = False):
+    """Train / prefill MLA, blockwise. Returns (B, T, D) (+ latents)."""
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.num_heads
+    dtype = x.dtype
+    pos = positions if positions is not None else jnp.arange(t)
+    q_nope, q_rope = _project_q(cfg, params, x, pos)
+    c_kv, k_rope = _project_kv_latent(cfg, params, x, pos)
+    k_nope, v = _expand_kv(cfg, params, c_kv)
+    # assemble full-rank q/k with the shared rope channel appended
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)         # (B,T,H,qk)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], h, m.qk_rope_head_dim))],
+        axis=-1)
+    # v padded to qk width so the shared blockwise kernel applies; sliced back
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - m.v_head_dim)))
+    out = blockwise_attention(q[:, :, :, None, :], k, v_pad,
+                              causal=True, q_block=q_block,
+                              kv_block=kv_block)
+    out = out[:, :, :, 0, : m.v_head_dim].reshape(b, t, h * m.v_head_dim)
+    out = out @ fsdp_use(params["wo"], "wo", dtype)
+    if return_latent:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def fill_cache(cfg: ModelConfig, c_kv: jax.Array, k_rope: jax.Array,
+               max_len: int, dtype=jnp.bfloat16) -> MLACache:
+    b, t, _ = c_kv.shape
+    cache = init_cache(cfg, b, max_len, dtype)
+    return MLACache(
+        c_kv=cache.c_kv.at[:, :t].set(c_kv.astype(dtype)),
+        k_rope=cache.k_rope.at[:, :t].set(k_rope.astype(dtype)),
+        pos=jnp.asarray(t, jnp.int32))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _decode_common(cfg, params, x, cache):
+    b, _, _ = x.shape
+    pos = cache.pos
+    p_now = jnp.full((1,), pos, jnp.int32)
+    q_nope, q_rope = _project_q(cfg, params, x, p_now)
+    c_new, kr_new = _project_kv_latent(cfg, params, x, p_now)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, kr_new.astype(cache.k_rope.dtype), pos, axis=1)
+    new_cache = MLACache(c_kv=c_kv, k_rope=k_rope, pos=pos + 1)
+    s_mask = jnp.arange(c_kv.shape[1]) <= pos
+    return q_nope[:, 0], q_rope[:, 0], new_cache, s_mask
+
+
+def fwd_decode(cfg: ModelConfig, params: dict, x: jax.Array,
+               cache: MLACache) -> tuple[jax.Array, MLACache]:
+    """Naive decode: expand K/V from latent for every cached position."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    dtype = x.dtype
+    qn, qr, cache, s_mask = _decode_common(cfg, params, x, cache)
+    k_nope, v = _expand_kv(cfg, params, cache.c_kv.astype(dtype))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhe,bshe->bhs", qn.astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", qr.astype(jnp.float32),
+                      cache.k_rope.astype(jnp.float32))) * scale
+    s = jnp.where(s_mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshv->bhv", p, v.astype(jnp.float32))
+    out = o.reshape(b, 1, h * m.v_head_dim).astype(dtype)
+    return out @ params["wo"].astype(dtype), cache
+
+
+def fwd_decode_absorbed(cfg: ModelConfig, params: dict, x: jax.Array,
+                        cache: MLACache) -> tuple[jax.Array, MLACache]:
+    """Absorbed decode: attend in latent space; W_uk folds into q, W_uv into
+    the output head. FLOPs per step drop from O(S*r*H*(nope+v)) to
+    O(S*H*(r+rope))."""
+    m = cfg.mla
+    h = cfg.num_heads
+    b = x.shape[0]
+    dtype = x.dtype
+    qn, qr, cache, s_mask = _decode_common(cfg, params, x, cache)
+    wkv_up = params["wkv_up"].astype(jnp.float32).reshape(
+        m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_up[..., :m.qk_nope_head_dim]                # (r, H, nope)
+    w_uv = wkv_up[..., m.qk_nope_head_dim:]                # (r, H, v)
+    # fold: q_lat[b,h,r] = sum_e q_nope[b,h,e] * w_uk[r,h,e]
+    q_lat = jnp.einsum("bhe,rhe->bhr", qn.astype(jnp.float32), w_uk)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    c = cache.c_kv.astype(jnp.float32)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c)
+         + jnp.einsum("bhr,bsr->bhs", qr.astype(jnp.float32),
+                      cache.k_rope.astype(jnp.float32))) * scale
+    s = jnp.where(s_mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c)               # latent output
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv)            # absorbed W_uv
+    out = o.reshape(b, 1, h * m.v_head_dim).astype(dtype)
+    return out @ params["wo"].astype(dtype), cache

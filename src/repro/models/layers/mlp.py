@@ -1,0 +1,44 @@
+"""Feed-forward blocks: SiLU-GLU (llama/olmo/deepseek), GeGLU (gemma),
+non-gated GELU (starcoder2/whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.models.sharding_hints import fsdp_use
+
+
+def init(key: jax.Array, kind: str, d: int, d_ff: int,
+         dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = d_ff ** -0.5
+    if kind in ("silu_glu", "geglu"):
+        return {
+            "wi_gate": jax.random.normal(k1, (d, d_ff), dtype) * scale_in,
+            "wi_up": jax.random.normal(k2, (d, d_ff), dtype) * scale_in,
+            "wo": jax.random.normal(k3, (d_ff, d), dtype) * scale_out,
+        }
+    if kind == "gelu":
+        return {
+            "wi": jax.random.normal(k1, (d, d_ff), dtype) * scale_in,
+            "bi": jnp.zeros((d_ff,), dtype),
+            "wo": jax.random.normal(k2, (d_ff, d), dtype) * scale_out,
+            "bo": jnp.zeros((d,), dtype),
+        }
+    raise ValueError(f"unknown mlp kind {kind!r}")
+
+
+def apply(kind: str, params: dict, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    if kind in ("silu_glu", "geglu"):
+        gate = x @ fsdp_use(params["wi_gate"], "wi_gate", dtype)
+        up = x @ fsdp_use(params["wi_up"], "wi_up", dtype)
+        act = jax.nn.silu(gate) if kind == "silu_glu" \
+            else jax.nn.gelu(gate, approximate=True)
+        return (act * up) @ fsdp_use(params["wo"], "wo", dtype)
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ fsdp_use(params["wi"], "wi", dtype)
+                        + params["bi"].astype(dtype), approximate=True)
+        return h @ fsdp_use(params["wo"], "wo", dtype) \
+            + params["bo"].astype(dtype)
+    raise ValueError(f"unknown mlp kind {kind!r}")

@@ -1,0 +1,168 @@
+"""Mixture-of-Experts with sort-based dispatch + optional Sinkhorn router.
+
+Dispatch is **sort-based** (argsort tokens by expert, gather into (E, C, D)
+groups, batched expert matmul, scatter-add back) rather than the GShard
+one-hot-einsum form: the einsum dispatch costs O(T^2 * k * cf * D) FLOPs of
+pure bookkeeping, which would swamp the useful-FLOPs ratio in the roofline
+tables; gathers/scatters cost bytes, not FLOPs. Tokens beyond per-expert
+capacity C = ceil(T * top_k * cf / E) are dropped (standard).
+
+Routers:
+  * ``topk``     -- softmax gate, faithful to mixtral/deepseek.
+  * ``sinkhorn`` -- the paper's technique as a first-class framework feature:
+    token->expert assignment is an entropy-regularized OT problem (uniform
+    expert marginal = perfect balance), solved with the same Sinkhorn-Knopp
+    core (`repro.core.ot`) the WMD engine uses. The transport plan replaces
+    the softmax probabilities before top-k. See DESIGN.md section 5.
+
+The load-balance auxiliary loss (switch-style) is returned for the topk
+router; the sinkhorn router is balanced by construction (marginal constraint)
+so its aux loss is ~0 by design -- asserted in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.ot import sinkhorn_plan
+from repro.models.layers import mlp
+from repro.models.sharding_hints import fsdp_use
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    e = cfg.moe
+    d = cfg.d_model
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, e.d_ff_expert ** -0.5
+    ks = jax.random.split(k_e, 3)
+    params = {
+        "router": jax.random.normal(k_r, (d, e.num_experts), dtype) * s_in,
+        "wi_gate": jax.random.normal(
+            ks[0], (e.num_experts, d, e.d_ff_expert), dtype) * s_in,
+        "wi_up": jax.random.normal(
+            ks[1], (e.num_experts, d, e.d_ff_expert), dtype) * s_in,
+        "wo": jax.random.normal(
+            ks[2], (e.num_experts, e.d_ff_expert, d), dtype) * s_out,
+    }
+    if e.num_shared > 0:
+        params["shared"] = mlp.init(
+            k_s, "silu_glu", d, e.num_shared * e.d_ff_expert, dtype)
+    return params
+
+
+def _gates(e: MoEConfig, logits: jax.Array):
+    """(T, E) routing logits -> (T, k) expert ids + normalized weights + aux."""
+    t = logits.shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    if e.router == "sinkhorn":
+        # OT: uniform token mass -> uniform expert marginal (balanced).
+        a = jnp.full((t,), 1.0 / t, jnp.float32)
+        b = jnp.full((e.num_experts,), 1.0 / e.num_experts, jnp.float32)
+        cost = -jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        plan = sinkhorn_plan(cost, a, b, lamb=e.sinkhorn_lamb,
+                             max_iter=e.sinkhorn_iters).plan
+        scores = plan * t                    # rows ~ sum to 1
+    elif e.router == "topk":
+        scores = probs
+    else:
+        raise ValueError(f"unknown router {e.router!r}")
+    weights, ids = jax.lax.top_k(scores, e.top_k)           # (T, k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, axis=-1, keepdims=True), 1e-9)
+    # switch-style load-balance aux: E * sum_e f_e * p_e
+    assign = jax.nn.one_hot(ids[:, 0], e.num_experts, dtype=jnp.float32)
+    f_e = jnp.mean(assign, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e.num_experts * jnp.sum(f_e * p_e)
+    return ids, weights, aux
+
+
+def _dispatch_group(e: MoEConfig, xg: jax.Array, ids: jax.Array,
+                    weights: jax.Array, cap: int):
+    """Group-local sort-based dispatch. xg (Tg, D); ids/weights (Tg, k).
+    Returns grouped (E, C, D), combine metadata. All index ops are local to
+    the group, so under vmap the group axis is a clean batch dim for GSPMD
+    (no cross-group scatter; see ``apply``)."""
+    tg, d = xg.shape
+    k = e.top_k
+    flat_exp = ids.reshape(tg * k)
+    flat_tok = jnp.repeat(jnp.arange(tg), k)
+    flat_w = weights.reshape(tg * k)
+    order = jnp.argsort(flat_exp, stable=True)
+    sorted_exp = flat_exp[order]
+    sorted_tok = flat_tok[order]
+    sorted_w = flat_w[order]
+    counts = jnp.bincount(sorted_exp, length=e.num_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_exp = jnp.arange(tg * k) - starts[sorted_exp]
+    keep = pos_in_exp < cap
+    slot = jnp.where(keep, sorted_exp * cap + pos_in_exp,
+                     e.num_experts * cap)
+    buf = jnp.zeros((e.num_experts * cap + 1, d), xg.dtype)
+    buf = buf.at[slot].set(xg[sorted_tok])
+    grouped = buf[:-1].reshape(e.num_experts, cap, d)
+    return grouped, (keep, slot, sorted_tok, sorted_w)
+
+
+def _combine_group(meta, y: jax.Array, tg: int, d: int):
+    keep, slot, sorted_tok, sorted_w = meta
+    yf = y.reshape(-1, d)                                   # (E*C, D)
+    contrib = jnp.where(keep[:, None],
+                        yf[jnp.minimum(slot, yf.shape[0] - 1)]
+                        * sorted_w[:, None].astype(y.dtype), 0.0)
+    return jnp.zeros((tg, d), y.dtype).at[sorted_tok].add(contrib)
+
+
+def apply(cfg: ModelConfig, params: dict, x: jax.Array
+          ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar).
+
+    Grouped sort-based dispatch: each batch row is a dispatch group
+    (GShard's group-local capacity), and the whole gather/sort/scatter
+    pipeline is vmapped over the batch axis. This keeps dispatch FLOP-free
+    (no one-hot einsum) while staying GSPMD-tileable: every index op
+    carries the sharded batch dim, so dispatch is device-local. The first
+    (ungrouped) version forced GSPMD to replicate the (E*C, D) buffers and
+    all-reduce ~24 GB per layer -- see EXPERIMENTS.md §Perf iteration log.
+
+    Capacity C = ceil(S * top_k * cf / E) per group; overflow drops are
+    group-local (standard GShard semantics).
+    """
+    e = cfg.moe
+    b, s, d = x.shape
+    dtype = x.dtype
+    t = b * s
+
+    logits = x.reshape(t, d) @ params["router"].astype(dtype)  # (T, E)
+    ids, weights, aux = _gates(e, logits)                      # (T, k)
+    cap = max(int(s * e.top_k * e.capacity_factor / e.num_experts + 1),
+              e.top_k)
+
+    ids_g = ids.reshape(b, s, e.top_k)
+    w_g = weights.reshape(b, s, e.top_k)
+
+    grouped, meta = jax.vmap(
+        lambda xg, i, w: _dispatch_group(e, xg, i, w, cap))(x, ids_g, w_g)
+    # pin the intended layout: batch over dp, expert-hidden over model.
+    # Without these anchors GSPMD chose a d-sharded contraction and emitted
+    # ~21 GB all-reduces per layer (EXPERIMENTS.md §Perf).
+    from repro.models.sharding_hints import hint_moe_tokens, hint_moe_hidden
+    # decode trade-off: replicate token buffers (move activations) only when
+    # they are smaller than the per-chip weight gather they would avoid
+    rep_dec = (b * cap) < (3 * e.d_ff_expert) // 8
+    grouped = hint_moe_tokens(grouped, rep_dec)  # (B,E,C,D) -> P(dp,N,N,N)
+    gate = jnp.einsum("becd,edf->becf", grouped,
+                      fsdp_use(params["wi_gate"], "wi_gate", dtype))
+    up = jnp.einsum("becd,edf->becf", grouped,
+                    fsdp_use(params["wi_up"], "wi_up", dtype))
+    h = hint_moe_hidden(jax.nn.silu(gate) * up, rep_dec)  # P(dp,N,N,model)
+    y = jnp.einsum("becf,efd->becd", h, fsdp_use(params["wo"], "wo", dtype))
+    y = hint_moe_tokens(y, rep_dec)
+
+    out = jax.vmap(lambda m, yg: _combine_group(m, yg, s, d))(meta, y)
+
+    if e.num_shared > 0:
+        out = out + mlp.apply("silu_glu", params["shared"],
+                              x.reshape(t, d)).reshape(b, s, d)
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

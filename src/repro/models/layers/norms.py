@@ -1,0 +1,38 @@
+"""Normalization layers: RMSNorm, LayerNorm, and OLMo's non-parametric LN.
+
+All norms compute in f32 regardless of activation dtype (standard practice)
+and cast back to the input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(kind: str, d: int, dtype=jnp.float32) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":
+        return {}  # OLMo: no learnable parameters
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def apply(kind: str, params: dict, x: jax.Array, *, eps: float = 1e-6
+          ) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * params["scale"].astype(jnp.float32)
+    elif kind in ("layernorm", "nonparam_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"].astype(jnp.float32) \
+                + params["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown norm kind {kind!r}")
+    return y.astype(dtype)

@@ -1,0 +1,139 @@
+"""Griffin recurrent block: conv1d + RG-LRU (recurrentgemma).
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(L) * r_t)       (L learnable; c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the (a, b) linear
+recurrence -- O(log T) depth, TPU-friendly. Decode carries (h, conv_state)
+with O(1) work per token, which is what makes long_500k run for this family.
+
+Block structure (Griffin): two branches from x --
+  gate branch: gelu(W_gate x); rnn branch: W_in x -> causal depthwise conv1d
+  (width 4) -> RG-LRU -> multiply by gate -> W_out.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding_hints import fsdp_use
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array         # (B, D) recurrent state
+    conv: jax.Array      # (B, W-1, D) trailing inputs for the causal conv
+    pos: jax.Array
+
+
+def init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_conv_width
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "w_gate": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "w_in": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (w, d), dtype) * w ** -0.5,
+        "conv_b": jnp.zeros((d,), dtype),
+        "w_a": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "b_a": jnp.zeros((d,), dtype),
+        "w_x": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "b_x": jnp.zeros((d,), dtype),
+        # softplus(lambda) init so a ~ 0.9..0.999 (Griffin's init range)
+        "lam": jnp.full((d,), 0.7, dtype),
+        "w_out": jax.random.normal(ks[5], (d, d), dtype) * s,
+    }
+
+
+def _rglru_coeffs(params: dict, u: jax.Array):
+    """u: (..., D) conv output -> (a, b) of h_t = a*h_{t-1} + b. f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ fsdp_use(params["w_a"], "w_a", jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ fsdp_use(params["w_x"], "w_x", jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def _causal_conv(params: dict, x: jax.Array, history: jax.Array | None = None):
+    """Depthwise causal conv, width W. x (B,T,D); history (B,W-1,D) or zeros."""
+    w = params["conv_w"].shape[0]
+    b, t, d = x.shape
+    if history is None:
+        history = jnp.zeros((b, w - 1, d), x.dtype)
+    xx = jnp.concatenate([history, x], axis=1)              # (B, T+W-1, D)
+    out = jnp.zeros((b, t, d), x.dtype)
+    for tap in range(w):                                    # width is tiny (4)
+        out = out + xx[:, tap: tap + t] * params["conv_w"][tap].astype(x.dtype)
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def fwd_full(cfg: ModelConfig, params: dict, x: jax.Array,
+             h0: jax.Array | None = None, *, return_state: bool = False):
+    """Train/prefill. x (B,T,D) -> (B,T,D) via associative scan."""
+    b, t, d = x.shape
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ fsdp_use(params["w_gate"], "w_gate", dtype),
+                       approximate=True)
+    xin = x @ fsdp_use(params["w_in"], "w_in", dtype)
+    u = _causal_conv(params, xin)
+    a, bb = _rglru_coeffs(params, u)                        # (B,T,D) f32
+    if h0 is not None:
+        bb = bb.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bb), axis=1)
+    y = (h.astype(dtype) * gate) @ fsdp_use(params["w_out"], "w_out", dtype)
+    if return_state:
+        w = params["conv_w"].shape[0]
+        state = RGLRUState(h=h[:, -1], conv=xin[:, t - (w - 1):]
+                           .astype(jnp.float32),
+                           pos=jnp.asarray(t, jnp.int32))
+        return y, state
+    return y
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> RGLRUState:
+    d = cfg.d_model
+    w = cfg.rglru_conv_width
+    return RGLRUState(h=jnp.zeros((batch, d), dtype),
+                      conv=jnp.zeros((batch, w - 1, d), dtype),
+                      pos=jnp.zeros((), jnp.int32))
+
+
+def fwd_decode(cfg: ModelConfig, params: dict, x: jax.Array,
+               state: RGLRUState) -> tuple[jax.Array, RGLRUState]:
+    """One step. x (B,1,D). O(1) per token."""
+    b, _, d = x.shape
+    dtype = x.dtype
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate"].astype(dtype),
+                       approximate=True)
+    xin = x[:, 0] @ params["w_in"].astype(dtype)            # (B, D)
+    # conv over (history ++ xin)
+    w = params["conv_w"].shape[0]
+    xx = jnp.concatenate([state.conv, xin[:, None]], axis=1)  # (B, W, D)
+    u = jnp.einsum("bwd,wd->bd", xx.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32)) \
+        + params["conv_b"].astype(jnp.float32)
+    a, bb = _rglru_coeffs(params, u[:, None])
+    h = a[:, 0] * state.h.astype(jnp.float32) + bb[:, 0]
+    y = (h.astype(dtype) * gate) @ params["w_out"].astype(dtype)
+    new_state = RGLRUState(h=h.astype(state.h.dtype),
+                           conv=xx[:, 1:].astype(state.conv.dtype),
+                           pos=state.pos + 1)
+    return y[:, None], new_state

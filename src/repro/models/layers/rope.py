@@ -1,0 +1,30 @@
+"""Rotary position embeddings (RoPE), decode-aware (absolute positions)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _freqs(head_dim: int, theta: float, dtype=jnp.float32) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=dtype) / head_dim
+    return 1.0 / (theta ** exponent)                    # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+
+    Rotates pairs (x[2i], x[2i+1]) by positions * freq_i. Computed in f32.
+    """
+    dtype = x.dtype
+    head_dim = x.shape[-1]
+    freqs = _freqs(head_dim, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(dtype)

@@ -1,0 +1,343 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is a gated linear-attention recurrence:
+    m_t = max(log_f_t + m_{t-1}, log_i_t)                  (stabilizer)
+    f'  = exp(log_f_t + m_{t-1} - m_t);  i' = exp(log_i_t - m_t)
+    C_t = f' C_{t-1} + i' k_t v_t^T;     n_t = f' n_{t-1} + i' k_t
+    h_t = (q_t C_t) / max(|q_t . n_t|, exp(-m_t))          (q pre-scaled)
+
+Execution paths:
+  * ``mlstm_chunkwise`` -- the TPU-native form (DESIGN.md section 2 spirit):
+    sequence is split into chunks; within a chunk the recurrence is evaluated
+    as a masked (L x L) matmul against the MXU, between chunks a (hd x hd)
+    state is carried by a lax.scan. O(T*L) memory instead of O(T^2); this is
+    what makes prefill_32k feasible (a full 32k x 32k decay matrix would be
+    the same petabyte blow-up as naive attention).
+  * ``mlstm_recurrent`` -- step-by-step oracle (tests + decode).
+
+sLSTM has a *non-linear* recurrent dependency (block-diagonal R h_{t-1}
+inside the gates) so it is inherently sequential: lax.scan over time for
+train/prefill, O(1) step for decode. This is the xLSTM paper's own stated
+trade-off, not an implementation shortcut.
+
+Block wiring (both kinds): pre-LN -> up-projection x2 -> cell with causal
+conv4 + silu on the q/k path -> per-head GroupNorm -> gated by silu branch
+-> down-projection. d_ff = 0 in the config: blocks own their projections.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import norms
+from repro.models.sharding_hints import fsdp_use
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, hd, hd)
+    n: jax.Array     # (B, H, hd)
+    m: jax.Array     # (B, H)
+    conv: jax.Array  # (B, W-1, D) conv history
+    pos: jax.Array
+
+
+def mlstm_recurrent(q, k, v, log_i, log_f, state=None):
+    """Oracle: q,k,v (B,H,T,hd) (q pre-scaled by hd^-0.5), gates (B,H,T).
+    Returns h (B,H,T,hd) and final (C, n, m)."""
+    b, h, t, hd = q.shape
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fp = jnp.exp(lf + m - m_new)
+        ip = jnp.exp(li - m_new)
+        c = fp[..., None, None] * c \
+            + ip[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, c)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    xs = (q.transpose(2, 0, 1, 3), k.transpose(2, 0, 1, 3),
+          v.transpose(2, 0, 1, 3), log_i.transpose(2, 0, 1),
+          log_f.transpose(2, 0, 1))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3), (c, n, m)
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, *, chunk: int = 256, state=None):
+    """Chunk-parallel mLSTM. Same contract as mlstm_recurrent."""
+    b, h, t, hd = q.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        raise ValueError(f"T={t} not divisible by chunk={chunk}")
+    nc = t // chunk
+    if state is None:
+        c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, h, hd), jnp.float32)
+        m0 = jnp.full((b, h), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    rs = lambda x: x.reshape(b, h, nc, chunk, *x.shape[3:]).swapaxes(0, 2) \
+        .swapaxes(1, 2)  # (nc, B, H, L, ...)
+    qs, ks_, vs = rs(q), rs(k), rs(v)
+    lis, lfs = rs(log_i), rs(log_f)
+
+    def chunk_step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qc, kc, vc, li, lf = inp                         # (B,H,L,...)
+        bcum = jnp.cumsum(lf, axis=-1)                   # (B,H,L)
+        # log intra scores: li[s] + b[l] - b[s], s <= l
+        logw = li[..., None, :] + bcum[..., :, None] - bcum[..., None, :]
+        l_idx = jnp.arange(chunk)
+        tri = l_idx[:, None] >= l_idx[None, :]           # s <= l
+        logw = jnp.where(tri, logw, -jnp.inf)
+        m_intra = jnp.max(logw, axis=-1)                 # (B,H,L)
+        m_state = m_prev[..., None] + bcum
+        m_new = jnp.maximum(m_state, m_intra)
+        d = jnp.exp(logw - m_new[..., None])             # (B,H,L,L) masked
+        inter = jnp.exp(m_state - m_new)                 # (B,H,L)
+        s_intra = jnp.einsum("bhld,bhsd->bhls", qc, kc) * d
+        num = jnp.einsum("bhls,bhse->bhle", s_intra, vc) \
+            + inter[..., None] * jnp.einsum("bhld,bhde->bhle", qc, c_prev)
+        nvec = jnp.einsum("bhls,bhsd->bhld", d, kc) \
+            + inter[..., None] * n_prev[..., None, :]
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhld,bhld->bhl", qc, nvec)),
+                          jnp.exp(-m_new))
+        hout = num / den[..., None]
+        # carry to next chunk (state at the last step of this chunk)
+        m_out = m_new[..., -1]                           # (B,H)
+        w_end = jnp.exp(li + bcum[..., -1:] - bcum - m_out[..., None])
+        c_new = jnp.exp(m_prev + bcum[..., -1] - m_out)[..., None, None] \
+            * c_prev + jnp.einsum("bhs,bhsd,bhse->bhde", w_end, kc, vc)
+        n_new = jnp.exp(m_prev + bcum[..., -1] - m_out)[..., None] * n_prev \
+            + jnp.einsum("bhs,bhsd->bhd", w_end, kc)
+        return (c_new, n_new, m_out), hout
+
+    (c, n, m), hs = jax.lax.scan(chunk_step, (c0, n0, m0),
+                                 (qs, ks_, vs, lis, lfs))
+    # hs: (nc, B, H, L, hd) -> (B, H, T, hd)
+    h_out = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, t, hd)
+    return h_out, (c, n, m)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h, hd = cfg.num_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    return {
+        "ln": norms.init("layernorm", d, dtype),
+        "w_up": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "w_gate": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (4, d), dtype) * 0.5,
+        "conv_b": jnp.zeros((d,), dtype),
+        "wq": jax.random.normal(ks[3], (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(ks[4], (d, h * hd), dtype) * s,
+        "wv": jax.random.normal(ks[5], (d, h * hd), dtype) * s,
+        "w_if": jax.random.normal(ks[6], (d, 2 * h), dtype) * s,
+        "b_if": jnp.concatenate([jnp.zeros((h,), dtype),
+                                 jnp.full((h,), 3.0, dtype)]),  # f-bias high
+        "gn": {"scale": jnp.ones((h * hd,), dtype)},
+        "w_down": jax.random.normal(ks[7], (d, d), dtype) * s,
+    }
+
+
+def _conv_silu(params, x, history=None):
+    w = params["conv_w"].shape[0]
+    b, t, d = x.shape
+    if history is None:
+        history = jnp.zeros((b, w - 1, d), x.dtype)
+    xx = jnp.concatenate([history, x], axis=1)
+    out = jnp.zeros((b, t, d), x.dtype)
+    for tap in range(w):
+        out = out + xx[:, tap: tap + t] * params["conv_w"][tap].astype(x.dtype)
+    return jax.nn.silu(out + params["conv_b"].astype(x.dtype)), xx[:, t:]
+
+
+def _mlstm_qkvg(cfg, params, xn, conv_hist=None):
+    b, t, d = xn.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    dtype = xn.dtype
+    up = xn @ fsdp_use(params["w_up"], "w_up", dtype)
+    gate = xn @ fsdp_use(params["w_gate"], "w_gate", dtype)
+    cx, new_hist = _conv_silu(params, up, conv_hist)
+    q = (cx @ fsdp_use(params["wq"], "wq", dtype)).reshape(b, t, h, hd)
+    k = (cx @ fsdp_use(params["wk"], "wk", dtype)).reshape(b, t, h, hd)
+    v = (up @ fsdp_use(params["wv"], "wv", dtype)).reshape(b, t, h, hd)
+    gif = (cx @ params["w_if"].astype(dtype)
+           + params["b_if"].astype(dtype)).astype(jnp.float32)
+    log_i = gif[..., :h]
+    log_f = jax.nn.log_sigmoid(gif[..., h:])
+    tb = lambda x: x.transpose(0, 2, 1, 3).astype(jnp.float32)  # (B,H,T,hd)
+    return (tb(q) * hd ** -0.5, tb(k), tb(v),
+            log_i.transpose(0, 2, 1), log_f.transpose(0, 2, 1),
+            gate, new_hist)
+
+
+def mlstm_block(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                chunk: int = 256, return_state: bool = False):
+    """Full-sequence mLSTM block (train/prefill). Residual added by caller."""
+    b, t, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    dtype = x.dtype
+    xn = norms.apply("layernorm", params["ln"], x)
+    q, k, v, li, lf, gate, hist = _mlstm_qkvg(cfg, params, xn)
+    hs, (c, n, m) = mlstm_chunkwise(q, k, v, li, lf, chunk=min(chunk, t))
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, t, h * hd).astype(dtype)
+    hs = norms.apply("rmsnorm", params["gn"], hs)          # per-channel GN
+    out = (hs * jax.nn.silu(gate)) @ fsdp_use(params["w_down"], "w_down", dtype)
+    if return_state:
+        state = MLSTMState(c=c, n=n, m=m, conv=hist.astype(jnp.float32),
+                           pos=jnp.asarray(t, jnp.int32))
+        return out, state
+    return out
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    h, hd, d = cfg.num_heads, cfg.head_dim, cfg.d_model
+    return MLSTMState(
+        c=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, 3, d), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mlstm_block_decode(cfg: ModelConfig, params: dict, x: jax.Array,
+                       state: MLSTMState) -> tuple[jax.Array, MLSTMState]:
+    b, _, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    dtype = x.dtype
+    xn = norms.apply("layernorm", params["ln"], x)
+    q, k, v, li, lf, gate, hist = _mlstm_qkvg(
+        cfg, params, xn, state.conv.astype(dtype))
+    hs, (c, n, m) = mlstm_recurrent(q, k, v, li, lf,
+                                    state=(state.c, state.n, state.m))
+    hs = hs.transpose(0, 2, 1, 3).reshape(b, 1, h * hd).astype(dtype)
+    hs = norms.apply("rmsnorm", params["gn"], hs)
+    out = (hs * jax.nn.silu(gate)) @ fsdp_use(params["w_down"], "w_down", dtype)
+    return out, MLSTMState(c=c, n=n, m=m, conv=hist.astype(state.conv.dtype),
+                           pos=state.pos + 1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, D)
+    c: jax.Array   # (B, D)
+    n: jax.Array   # (B, D)
+    m: jax.Array   # (B, D)
+    pos: jax.Array
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "ln": norms.init("layernorm", d, dtype),
+        # input weights for 4 gates (i, f, z, o)
+        "w": jax.random.normal(ks[0], (d, 4 * d), dtype) * s,
+        # block-diagonal recurrent weights: (H, hd, 4*hd) per head
+        "r": jax.random.normal(ks[1], (h, hd, 4 * hd), dtype) * hd ** -0.5,
+        "b": jnp.concatenate([jnp.zeros((d,), dtype),
+                              jnp.full((d,), 3.0, dtype),     # f bias high
+                              jnp.zeros((2 * d,), dtype)]),
+        "gn": {"scale": jnp.ones((d,), dtype)},
+        "w_down": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "w_gate": jax.random.normal(ks[3], (d, d), dtype) * s,
+    }
+
+
+def _slstm_step(cfg, params, xt, state):
+    """One sLSTM step. xt: (B, 4D) pre-projected input contribution."""
+    b = xt.shape[0]
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = d // h
+    hh = state.h.astype(jnp.float32).reshape(b, h, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hh,
+                     params["r"].astype(jnp.float32)).reshape(b, 4 * d)
+    g = xt.astype(jnp.float32) + rec + params["b"].astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    log_i = gi
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    ip = jnp.exp(log_i - m_new)
+    fp = jnp.exp(log_f + state.m - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = fp * state.c + ip * z
+    n = fp * state.n + ip
+    h_new = o * c / jnp.maximum(n, EPS)
+    return SLSTMState(h=h_new, c=c, n=n, m=m_new, pos=state.pos + 1), h_new
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(h=z, c=z, n=z, m=jnp.full((batch, d), -1e30),
+                      pos=jnp.zeros((), jnp.int32))
+
+
+def slstm_block(cfg: ModelConfig, params: dict, x: jax.Array, *,
+                return_state: bool = False):
+    """Sequential sLSTM block over (B, T, D)."""
+    b, t, d = x.shape
+    dtype = x.dtype
+    xn = norms.apply("layernorm", params["ln"], x)
+    gate = xn @ fsdp_use(params["w_gate"], "w_gate", dtype)
+    xg = xn @ fsdp_use(params["w"], "w", dtype)                    # (B, T, 4D)
+    state0 = init_slstm_state(cfg, b)
+
+    def step(st, xt):
+        st, h = _slstm_step(cfg, params, xt, st)
+        return st, h
+
+    state, hs = jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2).astype(dtype)               # (B, T, D)
+    hs = norms.apply("rmsnorm", params["gn"], hs)
+    out = (hs * jax.nn.silu(gate)) @ fsdp_use(params["w_down"], "w_down", dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_block_decode(cfg: ModelConfig, params: dict, x: jax.Array,
+                       state: SLSTMState) -> tuple[jax.Array, SLSTMState]:
+    dtype = x.dtype
+    xn = norms.apply("layernorm", params["ln"], x)
+    gate = xn[:, 0] @ params["w_gate"].astype(dtype)
+    xg = xn[:, 0] @ params["w"].astype(dtype)
+    state, h = _slstm_step(cfg, params, xg, state)
+    h = norms.apply("rmsnorm", params["gn"], h.astype(dtype))
+    out = (h * jax.nn.silu(gate)) @ fsdp_use(params["w_down"], "w_down", dtype)
+    return out[:, None], state

@@ -1,0 +1,416 @@
+"""Decoder-only LM assembly: pattern-scanned blocks, train/prefill/decode.
+
+Layer stacks run under ``jax.lax.scan`` over *pattern units* (the repeating
+block-kind tuple from the config, e.g. Griffin's (rglru, rglru, attn)), with
+parameters stacked along a leading unit axis. This keeps the HLO O(1) in
+depth -- required to compile 56-layer models against 512 SPMD devices on this
+container -- and is how production JAX LMs (MaxText et al.) are built anyway.
+Non-conforming layers (deepseek's dense-FFN first layer, pattern tails like
+recurrentgemma's 38 = 12x3 + 2) are unrolled as ``prefix`` / ``tail`` groups.
+
+Caches are pytrees mirroring the same prefix/units/tail structure, with
+scanned-unit caches stacked on the leading axis, so decode also scans.
+
+The VLM (paligemma) path consumes precomputed patch embeddings as a
+full-attention prefix (prefix-LM masking); the frontend is a stub per the
+assignment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import attention, embedding, mla, mlp, moe, norms
+from repro.models.layers import rglru as rglru_mod
+from repro.models.layers import xlstm
+
+Params = Any
+Cache = Any
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    return (cfg.moe is not None
+            and layer_idx >= cfg.moe.first_dense_layers)
+
+
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str,
+               layer_idx: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict = {}
+    if kind == "attn":
+        p["mix_norm"] = norms.init(cfg.norm_kind, cfg.d_model, dtype)
+        p["mix"] = (mla.init(k1, cfg, dtype) if cfg.mla is not None
+                    else attention.init(k1, cfg, dtype))
+    elif kind == "rglru":
+        p["mix_norm"] = norms.init(cfg.norm_kind, cfg.d_model, dtype)
+        p["mix"] = rglru_mod.init(k1, cfg, dtype)
+    elif kind == "mlstm":
+        p["mix"] = xlstm.init_mlstm(k1, cfg, dtype)        # owns its LN
+    elif kind == "slstm":
+        p["mix"] = xlstm.init_slstm(k1, cfg, dtype)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    if _is_moe_layer(cfg, layer_idx):
+        p["mlp_norm"] = norms.init(cfg.norm_kind, cfg.d_model, dtype)
+        p["mlp"] = moe.init(k2, cfg, dtype)
+    elif cfg.moe is not None and layer_idx < cfg.moe.first_dense_layers:
+        p["mlp_norm"] = norms.init(cfg.norm_kind, cfg.d_model, dtype)
+        p["mlp"] = mlp.init(k3, "silu_glu", cfg.d_model,
+                            cfg.moe.d_ff_dense_first, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp_norm"] = norms.init(cfg.norm_kind, cfg.d_model, dtype)
+        p["mlp"] = mlp.init(k4, cfg.mlp_kind, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def apply_block_full(cfg: ModelConfig, kind: str, params: dict, x: jax.Array,
+                     *, layer_idx: int, prefix_len: int = 0,
+                     q_block: int, kv_block: int) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence block. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        xn = norms.apply(cfg.norm_kind, params["mix_norm"], x)
+        if cfg.mla is not None:
+            h = mla.fwd_full(cfg, params["mix"], xn,
+                             q_block=q_block, kv_block=kv_block)
+        else:
+            h = attention.fwd_full(cfg, params["mix"], xn,
+                                   prefix_len=prefix_len,
+                                   q_block=q_block, kv_block=kv_block)
+        x = x + h
+    elif kind == "rglru":
+        xn = norms.apply(cfg.norm_kind, params["mix_norm"], x)
+        x = x + rglru_mod.fwd_full(cfg, params["mix"], xn)
+    elif kind == "mlstm":
+        x = x + xlstm.mlstm_block(cfg, params["mix"], x)
+    elif kind == "slstm":
+        x = x + xlstm.slstm_block(cfg, params["mix"], x)
+
+    if "mlp" in params:
+        xn = norms.apply(cfg.norm_kind, params["mlp_norm"], x)
+        if _is_moe_layer(cfg, layer_idx):
+            h, aux = moe.apply(cfg, params["mlp"], xn)
+        elif cfg.moe is not None:
+            h = mlp.apply("silu_glu", params["mlp"], xn)
+        else:
+            h = mlp.apply(cfg.mlp_kind, params["mlp"], xn)
+        x = x + h
+    return x, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if kind == "attn":
+        if cfg.mla is not None:
+            return mla.init_cache(cfg, batch, max_len, dtype)
+        return attention.init_cache(cfg, batch, max_len, dtype)
+    if kind == "rglru":
+        return rglru_mod.init_state(cfg, batch)
+    if kind == "mlstm":
+        return xlstm.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return xlstm.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block_decode(cfg: ModelConfig, kind: str, params: dict,
+                       x: jax.Array, cache, *, layer_idx: int):
+    if kind == "attn":
+        if cfg.mla is not None:
+            decode_fn = mla.fwd_decode_absorbed if cfg.mla_absorbed \
+                else mla.fwd_decode
+            h, cache = decode_fn(
+                cfg, params["mix"],
+                norms.apply(cfg.norm_kind, params["mix_norm"], x), cache)
+        else:
+            h, cache = attention.fwd_decode(
+                cfg, params["mix"],
+                norms.apply(cfg.norm_kind, params["mix_norm"], x), cache)
+        x = x + h
+    elif kind == "rglru":
+        h, cache = rglru_mod.fwd_decode(
+            cfg, params["mix"],
+            norms.apply(cfg.norm_kind, params["mix_norm"], x), cache)
+        x = x + h
+    elif kind == "mlstm":
+        h, cache = xlstm.mlstm_block_decode(cfg, params["mix"], x, cache)
+        x = x + h
+    elif kind == "slstm":
+        h, cache = xlstm.slstm_block_decode(cfg, params["mix"], x, cache)
+        x = x + h
+
+    if "mlp" in params:
+        xn = norms.apply(cfg.norm_kind, params["mlp_norm"], x)
+        if _is_moe_layer(cfg, layer_idx):
+            h, _ = moe.apply(cfg, params["mlp"], xn)
+        elif cfg.moe is not None:
+            h = mlp.apply("silu_glu", params["mlp"], xn)
+        else:
+            h = mlp.apply(cfg.mlp_kind, params["mlp"], xn)
+        x = x + h
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# stack structure: prefix (unrolled) + units (scanned) + tail (unrolled)
+# ---------------------------------------------------------------------------
+
+class StackPlan(NamedTuple):
+    prefix: tuple[str, ...]          # unrolled leading layer kinds
+    unit: tuple[str, ...]            # repeating pattern
+    n_units: int
+    tail: tuple[str, ...]            # unrolled trailing kinds
+
+
+def stack_plan(cfg: ModelConfig) -> StackPlan:
+    kinds = cfg.layer_kinds()
+    n_prefix = cfg.moe.first_dense_layers if cfg.moe is not None else 0
+    body = kinds[n_prefix:]
+    unit = cfg.block_pattern
+    n_units = len(body) // len(unit)
+    tail = body[n_units * len(unit):]
+    return StackPlan(prefix=kinds[:n_prefix], unit=unit,
+                     n_units=n_units, tail=tail)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, *, max_positions: int = 0,
+                dtype=jnp.float32) -> Params:
+    plan = stack_plan(cfg)
+    n_prefix = len(plan.prefix)
+    keys = jax.random.split(key, 4)
+    params: dict = {
+        "embedding": embedding.init(keys[0], cfg, max_positions=max_positions,
+                                    dtype=dtype),
+        "final_norm": norms.init(cfg.norm_kind, cfg.d_model, dtype),
+    }
+    params["prefix"] = [
+        init_block(jax.random.fold_in(keys[1], i), cfg, kind, i, dtype)
+        for i, kind in enumerate(plan.prefix)]
+    # scanned units: stack identical-structure params on a leading axis
+    def unit_params(u: int):
+        return [init_block(jax.random.fold_in(keys[2], u * 131 + p), cfg,
+                           kind, n_prefix + u * len(plan.unit) + p, dtype)
+                for p, kind in enumerate(plan.unit)]
+    if plan.n_units > 0:
+        units = [unit_params(u) for u in range(plan.n_units)]
+        params["units"] = jax.tree.map(lambda *xs: jnp.stack(xs), *units)
+    else:
+        params["units"] = []
+    base_tail = n_prefix + plan.n_units * len(plan.unit)
+    params["tail"] = [
+        init_block(jax.random.fold_in(keys[3], i), cfg, kind,
+                   base_tail + i, dtype)
+        for i, kind in enumerate(plan.tail)]
+    return params
+
+
+def forward(cfg: ModelConfig, params: Params, x: jax.Array, *,
+            prefix_len: int = 0, q_block: int = 512, kv_block: int = 1024,
+            remat: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Run the block stack on embedded activations x (B, T, D).
+    Returns (hidden (B,T,D), total aux loss)."""
+    plan = stack_plan(cfg)
+    n_prefix = len(plan.prefix)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, kind in enumerate(plan.prefix):
+        x, aux = apply_block_full(cfg, kind, params["prefix"][i], x,
+                                  layer_idx=i, prefix_len=prefix_len,
+                                  q_block=q_block, kv_block=kv_block)
+        aux_total += aux
+
+    if plan.n_units > 0:
+        def unit_fn(x, unit_params):
+            aux_u = jnp.zeros((), jnp.float32)
+            for p, kind in enumerate(plan.unit):
+                # layer_idx only matters for the moe-vs-dense split, which is
+                # uniform inside scanned units
+                x, aux = apply_block_full(
+                    cfg, kind, unit_params[p], x,
+                    layer_idx=n_prefix + p, prefix_len=prefix_len,
+                    q_block=q_block, kv_block=kv_block)
+                aux_u += aux
+            return x, aux_u
+
+        scanned = jax.checkpoint(unit_fn) if remat else unit_fn
+
+        def scan_body(x, unit_params):
+            return scanned(x, unit_params)
+
+        x, aux_units = jax.lax.scan(scan_body, x, params["units"])
+        aux_total += jnp.sum(aux_units)
+
+    base_tail = n_prefix + plan.n_units * len(plan.unit)
+    for i, kind in enumerate(plan.tail):
+        x, aux = apply_block_full(cfg, kind, params["tail"][i], x,
+                                  layer_idx=base_tail + i,
+                                  prefix_len=prefix_len,
+                                  q_block=q_block, kv_block=kv_block)
+        aux_total += aux
+
+    x = norms.apply(cfg.norm_kind, params["final_norm"], x)
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# caches: same prefix/units/tail structure
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    plan = stack_plan(cfg)
+    cache = {
+        "prefix": [init_block_cache(cfg, k, batch, max_len, dtype)
+                   for k in plan.prefix],
+        "tail": [init_block_cache(cfg, k, batch, max_len, dtype)
+                 for k in plan.tail],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if plan.n_units > 0:
+        unit_cache = [init_block_cache(cfg, k, batch, max_len, dtype)
+                      for k in plan.unit]
+        cache["units"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_units, *x.shape)).copy(),
+            unit_cache)
+    else:
+        cache["units"] = []
+    return cache
+
+
+def apply_block_prefill(cfg: ModelConfig, kind: str, params: dict,
+                        x: jax.Array, *, layer_idx: int, max_len: int,
+                        prefix_len: int = 0, q_block: int, kv_block: int,
+                        cache_dtype=jnp.bfloat16):
+    """Full-sequence block that also emits its decode-cache entry."""
+    from repro.models.layers import attention as attn_mod
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        xn = norms.apply(cfg.norm_kind, params["mix_norm"], x)
+        if cfg.mla is not None:
+            h, (c_kv, k_rope) = mla.fwd_full(cfg, params["mix"], xn,
+                                             q_block=q_block,
+                                             kv_block=kv_block,
+                                             return_latent=True)
+            cache = mla.fill_cache(cfg, c_kv, k_rope, max_len, cache_dtype)
+        else:
+            h, (k_all, v_all) = attention.fwd_full(cfg, params["mix"], xn,
+                                                   prefix_len=prefix_len,
+                                                   q_block=q_block,
+                                                   kv_block=kv_block,
+                                                   return_kv=True)
+            cache = attn_mod.fill_cache(cfg, k_all, v_all, max_len,
+                                        cache_dtype)
+        x = x + h
+    elif kind == "rglru":
+        xn = norms.apply(cfg.norm_kind, params["mix_norm"], x)
+        h, cache = rglru_mod.fwd_full(cfg, params["mix"], xn,
+                                      return_state=True)
+        x = x + h
+    elif kind == "mlstm":
+        h, cache = xlstm.mlstm_block(cfg, params["mix"], x, return_state=True)
+        x = x + h
+    elif kind == "slstm":
+        h, cache = xlstm.slstm_block(cfg, params["mix"], x, return_state=True)
+        x = x + h
+    else:
+        raise ValueError(kind)
+
+    if "mlp" in params:
+        xn = norms.apply(cfg.norm_kind, params["mlp_norm"], x)
+        if _is_moe_layer(cfg, layer_idx):
+            h, aux = moe.apply(cfg, params["mlp"], xn)
+        elif cfg.moe is not None:
+            h = mlp.apply("silu_glu", params["mlp"], xn)
+        else:
+            h = mlp.apply(cfg.mlp_kind, params["mlp"], xn)
+        x = x + h
+    return x, aux, cache
+
+
+def prefill(cfg: ModelConfig, params: Params, x: jax.Array, *, max_len: int,
+            prefix_len: int = 0, q_block: int = 512, kv_block: int = 1024,
+            cache_dtype=jnp.bfloat16) -> tuple[jax.Array, Cache]:
+    """Prefill on embedded activations x (B, T, D). Returns (hidden, cache)."""
+    plan = stack_plan(cfg)
+    n_prefix = len(plan.prefix)
+    t = x.shape[1]
+    kw = dict(max_len=max_len, prefix_len=prefix_len, q_block=q_block,
+              kv_block=kv_block, cache_dtype=cache_dtype)
+
+    new_prefix = []
+    for i, kind in enumerate(plan.prefix):
+        x, _, c = apply_block_prefill(cfg, kind, params["prefix"][i], x,
+                                      layer_idx=i, **kw)
+        new_prefix.append(c)
+
+    new_units = []
+    if plan.n_units > 0:
+        def scan_body(x, unit_params):
+            caches = []
+            for p, kind in enumerate(plan.unit):
+                x, _, c = apply_block_prefill(cfg, kind, unit_params[p], x,
+                                              layer_idx=n_prefix + p, **kw)
+                caches.append(c)
+            return x, caches
+
+        x, new_units = jax.lax.scan(scan_body, x, params["units"])
+
+    base_tail = n_prefix + plan.n_units * len(plan.unit)
+    new_tail = []
+    for i, kind in enumerate(plan.tail):
+        x, _, c = apply_block_prefill(cfg, kind, params["tail"][i], x,
+                                      layer_idx=base_tail + i, **kw)
+        new_tail.append(c)
+
+    x = norms.apply(cfg.norm_kind, params["final_norm"], x)
+    cache = {"prefix": new_prefix, "units": new_units, "tail": new_tail,
+             "pos": jnp.asarray(t, jnp.int32)}
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                x: jax.Array) -> tuple[jax.Array, Cache]:
+    """One token step on embedded activations x (B, 1, D)."""
+    plan = stack_plan(cfg)
+    n_prefix = len(plan.prefix)
+    new_prefix = []
+    for i, kind in enumerate(plan.prefix):
+        x, c = apply_block_decode(cfg, kind, params["prefix"][i], x,
+                                  cache["prefix"][i], layer_idx=i)
+        new_prefix.append(c)
+
+    new_units = cache["units"]
+    if plan.n_units > 0:
+        def scan_body(x, unit):
+            unit_params, unit_cache = unit
+            new_caches = []
+            for p, kind in enumerate(plan.unit):
+                x, c = apply_block_decode(cfg, kind, unit_params[p], x,
+                                          unit_cache[p],
+                                          layer_idx=n_prefix + p)
+                new_caches.append(c)
+            return x, new_caches
+
+        x, new_units = jax.lax.scan(
+            scan_body, x, (params["units"], cache["units"]))
+
+    base_tail = n_prefix + plan.n_units * len(plan.unit)
+    new_tail = []
+    for i, kind in enumerate(plan.tail):
+        x, c = apply_block_decode(cfg, kind, params["tail"][i], x,
+                                  cache["tail"][i], layer_idx=base_tail + i)
+        new_tail.append(c)
+
+    x = norms.apply(cfg.norm_kind, params["final_norm"], x)
+    new_cache = {"prefix": new_prefix, "units": new_units, "tail": new_tail,
+                 "pos": cache["pos"] + 1}
+    return x, new_cache

@@ -1,0 +1,162 @@
+"""Uniform model API over the three assembly families (lm / vlm / enc-dec).
+
+``build_model(cfg)`` returns a ModelAPI whose five functions are everything
+the training loop, serving loop, and dry-run need:
+
+    init(key)                 -> params
+    loss(params, batch)       -> (scalar loss, metrics dict)
+    prefill(params, batch)    -> (last-position logits, cache)
+    decode(params, cache, tok)-> (logits, new cache)
+    init_cache(batch, max_len)-> cache pytree
+
+Batches (all int32 tokens; stub modalities per the assignment):
+    lm:    {tokens (B,S), labels (B,S)}
+    vlm:   {patches (B,P,D) f32, tokens (B,S-P), labels (B,S-P)}
+    audio: {frames (B,F,D) f32, tokens (B,S), labels (B,S)}
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, lm
+from repro.models.layers import embedding
+
+# decode tables for whisper's learned positions are sized to the largest
+# assigned decode shape
+_MAX_LEARNED_POS = 32768
+
+
+class ModelAPI(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE, f32 softmax, ignoring labels < 0."""
+    from repro.models.sharding_hints import hint_logits
+    logits = hint_logits(logits.astype(jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _compute_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+
+def build_model(cfg: ModelConfig, *, q_block: int = 512,
+                kv_block: int = 1024, remat: bool = True) -> ModelAPI:
+    if cfg.family == "audio":
+        return _build_encdec(cfg, q_block, kv_block, remat)
+    return _build_lm(cfg, q_block, kv_block, remat)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only (lm / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+def _build_lm(cfg: ModelConfig, q_block: int, kv_block: int,
+              remat: bool) -> ModelAPI:
+    is_vlm = cfg.family == "vlm"
+    dtype = _compute_dtype(cfg)
+
+    def init(key):
+        return lm.init_params(key, cfg, max_positions=_MAX_LEARNED_POS
+                              if cfg.learned_pos else 0)
+
+    def _embed_inputs(params, batch):
+        x = embedding.embed(cfg, params["embedding"], batch["tokens"],
+                            dtype=dtype)
+        prefix_len = 0
+        if is_vlm:
+            patches = batch["patches"].astype(dtype)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = patches.shape[1]
+        return x, prefix_len
+
+    def loss(params, batch):
+        x, prefix_len = _embed_inputs(params, batch)
+        h, aux = lm.forward(cfg, params, x, prefix_len=prefix_len,
+                            q_block=q_block, kv_block=kv_block, remat=remat)
+        if is_vlm:
+            h = h[:, prefix_len:]
+        logits = embedding.logits(cfg, params["embedding"], h)
+        ce = cross_entropy(logits, batch["labels"])
+        aux_w = cfg.moe.router_aux_loss if cfg.moe is not None else 0.0
+        total = ce + aux_w * aux
+        return total, {"ce": ce, "aux": aux}
+
+    def prefill_fn(params, batch, *, max_len: int):
+        x, prefix_len = _embed_inputs(params, batch)
+        h, cache = lm.prefill(cfg, params, x, max_len=max_len,
+                              prefix_len=prefix_len, q_block=q_block,
+                              kv_block=kv_block)
+        logits = embedding.logits(cfg, params["embedding"], h[:, -1:])
+        return logits, cache
+
+    def decode(params, cache, tokens):
+        pos = cache["pos"]
+        x = embedding.embed(cfg, params["embedding"], tokens,
+                            positions=pos[None], dtype=dtype)
+        h, cache = lm.decode_step(cfg, params, cache, x)
+        logits = embedding.logits(cfg, params["embedding"], h)
+        return logits, cache
+
+    def init_cache(batch, max_len):
+        return lm.init_cache(cfg, batch, max_len)
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, prefill=prefill_fn,
+                    decode=decode, init_cache=init_cache)
+
+
+# ---------------------------------------------------------------------------
+# enc-dec (whisper)
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg: ModelConfig, q_block: int, kv_block: int,
+                  remat: bool) -> ModelAPI:
+    dtype = _compute_dtype(cfg)
+
+    def init(key):
+        return encdec.init_params(key, cfg, max_positions=_MAX_LEARNED_POS)
+
+    def loss(params, batch):
+        enc_out = encdec.encode(cfg, params, batch["frames"], remat=remat)
+        h = encdec.decode_full(cfg, params, batch["tokens"], enc_out,
+                               q_block=q_block, kv_block=kv_block,
+                               remat=remat)
+        logits = embedding.logits(cfg, params["embedding"], h)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill_fn(params, batch, *, max_len: int):
+        h, cache = encdec.prefill(cfg, params, batch["frames"],
+                                  batch["tokens"], max_len=max_len,
+                                  q_block=q_block, kv_block=kv_block)
+        logits = embedding.logits(cfg, params["embedding"], h[:, -1:])
+        return logits, cache
+
+    def decode(params, cache, tokens):
+        pos = cache["pos"]
+        x = embedding.embed(cfg, params["embedding"], tokens,
+                            positions=pos[None], dtype=dtype)
+        h, cache = encdec.decode_step(cfg, params, cache, x)
+        logits = embedding.logits(cfg, params["embedding"], h)
+        return logits, cache
+
+    def init_cache(batch, max_len):
+        return encdec.init_cache(cfg, batch, max_len)
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, prefill=prefill_fn,
+                    decode=decode, init_cache=init_cache)

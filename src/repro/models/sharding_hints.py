@@ -1,0 +1,129 @@
+"""Activation-sharding hints (with_sharding_constraint at key cut points).
+
+GSPMD propagates parameter shardings well through matmuls but needs anchors
+on the few giant activations whose sharding is under-determined -- above all
+the (B, S, V) logits: left unconstrained they shard only over batch, and the
+f32 CE intermediates blow past HBM (measured: olmo train_4k 79 GiB/chip
+temp before hints).
+
+Models are mesh-agnostic; the axes come from a contextvar set by
+``activation_sharding(mesh)`` around trace time (dry-run, trainer, serving
+all wrap their trace/call sites). When the context is unset (unit tests,
+single-device runs) every hint is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_AXES: ContextVar[Optional[tuple]] = \
+    ContextVar("activation_sharding_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: jax.sharding.Mesh, mode: str = "train"):
+    """mode: "train"/"prefill" (token counts amortize FSDP weight gathers)
+    or "decode" (single token: gathering multi-GB MoE expert weights per
+    step is a loss -- measured 20x on mixtral decode; 3D expert weights
+    stay sharded and GSPMD reduces the tiny activations instead)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = "model" if "model" in mesh.axis_names else None
+    token = _AXES.set((dp, model, mode))
+    try:
+        yield
+    finally:
+        _AXES.reset(token)
+
+
+def _get():
+    return _AXES.get()
+
+
+def hint_logits(x: jax.Array) -> jax.Array:
+    """(..., S, V): batch over dp, vocab over model."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    dp, model = ctx[0], ctx[1]
+    spec = P(dp, *([None] * (x.ndim - 2)), model)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def hint_activations(x: jax.Array) -> jax.Array:
+    """(B, S, D): batch over dp, rest replicated."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    dp = ctx[0]
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def fsdp_use(w: jax.Array, name: str, dtype=None) -> jax.Array:
+    """FSDP gather point: cast (bf16 first => half the gather bytes) and
+    constrain the weight to its TP-only spec -- i.e. explicitly un-shard the
+    ``data`` (FSDP) axis at the point of use.
+
+    Without this anchor GSPMD tends to keep the weight sharded on the
+    contraction dim and all-reduce the *activation* gradients instead --
+    measured at ~12 GB/layer on mixtral train (EXPERIMENTS.md §Perf). With
+    it, the forward all-gathers weight shards (bf16, layer-sized) and the
+    weight-grad reduction becomes a reduce-scatter back to the FSDP shard --
+    the canonical FSDP dataflow.
+    """
+    out = w.astype(dtype) if dtype is not None else w
+    ctx = _get()
+    if ctx is None:
+        return out
+    if len(ctx) > 2 and ctx[2] == "decode" and w.ndim >= 3:
+        return out    # MoE expert weights: stay sharded at decode
+    from repro.distributed.partitioning import _RULES, _RULES_3D
+    base = None
+    if w.ndim >= 3 and name in _RULES_3D:
+        base = _RULES_3D[name]
+    elif name in _RULES:
+        base = _RULES[name]
+    if base is None or len(base) > w.ndim:
+        return out
+    entries = [None if e == "data" else e for e in base]
+    entries += [None] * (w.ndim - len(entries))
+    return jax.lax.with_sharding_constraint(out, P(*entries))
+
+
+def hint_moe_tokens(x: jax.Array, replicate_at_decode: bool = True
+                    ) -> jax.Array:
+    """MoE dispatch/output buffers (B, E, C, D): batch over dp only.
+
+    In decode mode, when the buffers are smaller than the expert-weight
+    gather (few big experts, e.g. mixtral: 25 MB of tokens vs 200 MB of
+    weights per layer), replicating them lets GSPMD keep weights sharded
+    and all-reduce activation-sized partials instead of streaming weights
+    (measured 3.8x on mixtral decode). Fine-grained MoE (deepseek, 64 small
+    experts) inverts the trade-off -- the caller passes the heuristic."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    if len(ctx) > 2 and ctx[2] == "decode" and replicate_at_decode:
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * x.ndim)))
+    dp = ctx[0]
+    return jax.lax.with_sharding_constraint(
+        x, P(dp, *([None] * (x.ndim - 1))))
+
+
+def hint_moe_hidden(x: jax.Array, replicate_at_decode: bool = True
+                    ) -> jax.Array:
+    """MoE expert hidden (B, E, C, F): batch over dp, F over model (TP)."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    if len(ctx) > 2 and ctx[2] == "decode" and replicate_at_decode:
+        return jax.lax.with_sharding_constraint(
+            x, P(*([None] * (x.ndim - 1)), ctx[1]))
+    dp, model = ctx[0], ctx[1]
+    return jax.lax.with_sharding_constraint(
+        x, P(dp, *([None] * (x.ndim - 2)), model))

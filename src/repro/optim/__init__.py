@@ -1,0 +1,9 @@
+"""Optimizers and distributed-optimization helpers."""
+from repro.optim.adamw import AdamW, AdamWState, adamw, global_norm
+from repro.optim.schedules import constant, warmup_cosine
+from repro.optim.compression import (CompressionState, compress_grads,
+                                     init_state as init_compression_state)
+
+__all__ = ["AdamW", "AdamWState", "adamw", "global_norm", "constant",
+           "warmup_cosine", "CompressionState", "compress_grads",
+           "init_compression_state"]

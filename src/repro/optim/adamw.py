@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay + global-norm clipping (pure pytree).
+
+No optax dependency (not installed offline); the state is a plain pytree so
+the FSDP sharding rules (`distributed.partitioning`) apply verbatim to the
+moments (same shapes as params).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any       # first moment, same pytree as params
+    nu: Any       # second moment
+
+
+class AdamW(NamedTuple):
+    init: Callable[[Any], AdamWState]
+    update: Callable[..., tuple[Any, AdamWState]]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array], *,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0) -> AdamW:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params: Any) -> AdamWState:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads: Any, state: AdamWState, params: Any
+               ) -> tuple[Any, AdamWState]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1.0 - b1) * g
+            v = b2 * v + (1.0 - b2) * g * g
+            mh = m / c1
+            vh = v / c2
+            step_val = mh / (jnp.sqrt(vh) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * step_val.astype(p.dtype)).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)
+
+    return AdamW(init=init, update=update)

@@ -1,0 +1,66 @@
+"""Gradient compression for the cross-pod all-reduce (int8 + error feedback).
+
+At multi-pod scale the pod axis is pure DP (partitioning.py), so the slowest
+collective is the cross-pod gradient all-reduce over the optical links. This
+module provides stochastic-free int8 block quantization with **error
+feedback** (the residual is carried to the next step, which keeps SGD/Adam
+convergence -- Karimireddy et al. 2019): the jit path wraps gradient leaves
+as quantize -> (all-reduce happens on the int8 view under GSPMD when the
+custom collective is wired) -> dequantize + residual.
+
+On this CPU container the collective itself is GSPMD-inserted and the
+quantize/dequantize pair simulates the numerics end-to-end; the bytes saving
+(4x vs f32) is accounted in the roofline's collective term when
+``--grad-compression`` is set on the launcher.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class CompressionState(NamedTuple):
+    residual: Any   # error-feedback residuals, same pytree as grads
+
+
+def init_state(grads_like: Any) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads_like))
+
+
+def _quantize_leaf(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8: returns (q int8, scale f32 per block)."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_leaf(q: jax.Array, scale: jax.Array, shape,
+                     size: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress_grads(grads: Any, state: CompressionState
+                   ) -> tuple[Any, CompressionState]:
+    """int8 round-trip with error feedback. Returns (grads', new state)."""
+    def leaf(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = _quantize_leaf(gf)
+        deq = _dequantize_leaf(q, s, gf.shape, gf.size)
+        return deq.astype(g.dtype), gf - deq
+
+    out = jax.tree.map(leaf, grads, state.residual)
+    is_pair = lambda t: isinstance(t, tuple)
+    new_grads = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+    new_resid = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+    return new_grads, CompressionState(residual=new_resid)

@@ -1,0 +1,5 @@
+"""Serving substrate: sharded prefill/decode + the WMD query service."""
+from repro.serving.serve_step import build_serve_fns
+from repro.serving.wmd_service import WMDService
+
+__all__ = ["build_serve_fns", "WMDService"]

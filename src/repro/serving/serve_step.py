@@ -1,0 +1,56 @@
+"""Serving steps: sharded prefill + decode under pjit.
+
+``build_serve_fns`` returns jit'd prefill / decode with explicit shardings:
+batch over (pod, data); KV caches batch-sharded (stack axis preserved);
+params per the same partitioning rules as training. The dry-run lowers these
+functions for the prefill_32k / decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import partitioning
+from repro.models.registry import ModelAPI
+
+
+def build_serve_fns(model: ModelAPI, mesh: Mesh, *, max_len: int):
+    rep = NamedSharding(mesh, P())
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+
+    def decode(params, cache, tokens):
+        return model.decode(params, cache, tokens)
+
+    # shardings derived from abstract cache structure
+    def cache_struct(batch_size):
+        return jax.eval_shape(
+            functools.partial(model.init_cache, batch_size, max_len))
+
+    def shardings_for(batch_size):
+        cstruct = cache_struct(batch_size)
+        cshard = partitioning.cache_shardings(mesh, cstruct)
+        pstruct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pshard = partitioning.param_shardings(mesh, pstruct)
+        return pshard, cshard
+
+    def jit_prefill(batch_size):
+        pshard, cshard = shardings_for(batch_size)
+        return jax.jit(prefill,
+                       in_shardings=(pshard, None),
+                       out_shardings=(rep, cshard))
+
+    def jit_decode(batch_size, *, donate_cache: bool = True):
+        pshard, cshard = shardings_for(batch_size)
+        tok_shard = NamedSharding(mesh, partitioning.sanitize_spec(
+            mesh, partitioning.batch_spec(mesh, 2), (batch_size, 1)))
+        return jax.jit(decode,
+                       in_shardings=(pshard, cshard, tok_shard),
+                       out_shardings=(None, cshard),
+                       donate_argnums=(1,) if donate_cache else ())
+
+    return jit_prefill, jit_decode

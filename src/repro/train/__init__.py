@@ -1,0 +1,5 @@
+"""Training substrate: step builder + fault-tolerant trainer loop."""
+from repro.train.step import TrainState, build_train_step, init_state, state_shardings
+from repro.train.trainer import Trainer
+
+__all__ = ["TrainState", "build_train_step", "init_state", "state_shardings", "Trainer"]

@@ -1,0 +1,115 @@
+"""Training step builder: loss + grad + AdamW under pjit, with microbatch
+gradient accumulation and optional int8 gradient compression.
+
+``build_train_step`` returns a jit'd function with explicit in/out shardings
+(params/opt FSDP+TP per partitioning.py, batch over (pod, data)), donated
+params/opt buffers, and remat already applied inside the model stack. The
+dry-run lowers exactly this function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import partitioning
+from repro.models.registry import ModelAPI
+from repro.optim import AdamW, AdamWState
+from repro.optim import compression as comp
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    comp: Optional[comp.CompressionState]
+
+
+def init_state(model: ModelAPI, optimizer: AdamW, key,
+               *, grad_compression: bool = False) -> TrainState:
+    params = model.init(key)
+    opt = optimizer.init(params)
+    cstate = comp.init_state(params) if grad_compression else None
+    return TrainState(params=params, opt=opt, comp=cstate)
+
+
+def state_shardings(mesh: Mesh, state: TrainState) -> TrainState:
+    pshard = partitioning.param_shardings(mesh, state.params)
+    rep = NamedSharding(mesh, P())
+    opt = AdamWState(step=rep,
+                     mu=partitioning.param_shardings(mesh, state.opt.mu),
+                     nu=partitioning.param_shardings(mesh, state.opt.nu))
+    cshard = None
+    if state.comp is not None:
+        cshard = comp.CompressionState(residual=partitioning.param_shardings(
+            mesh, state.comp.residual))
+    return TrainState(params=pshard, opt=opt, comp=cshard)
+
+
+def build_train_step(model: ModelAPI, optimizer: AdamW, mesh: Mesh, *,
+                     microbatches: int = 1, grad_compression: bool = False,
+                     donate: bool = True):
+    """Returns jit'd (state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step(state: TrainState, batch):
+        if microbatches > 1:
+            # gradient accumulation: scan over microbatch slices
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+
+        cstate = state.comp
+        if grad_compression and cstate is not None:
+            grads, cstate = comp.compress_grads(grads, cstate)
+
+        params, opt = optimizer.update(grads, state.opt, state.params)
+        out_metrics = {"loss": loss,
+                       "grad_norm": jax.tree.reduce(
+                           lambda a, b: a + b,
+                           jax.tree.map(lambda g: jnp.sum(
+                               jnp.square(g.astype(jnp.float32))), grads),
+                           0.0) ** 0.5}
+        out_metrics.update({k: v for k, v in metrics.items()})
+        return TrainState(params=params, opt=opt, comp=cstate), out_metrics
+
+    dummy = jax.eval_shape(
+        lambda k: init_state(model, optimizer, k,
+                             grad_compression=grad_compression),
+        jax.random.PRNGKey(0))
+    sshard = state_shardings(mesh, dummy)
+    rep = NamedSharding(mesh, P())
+
+    return jax.jit(
+        step,
+        in_shardings=(sshard, None),
+        out_shardings=(sshard, rep),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_struct: Any):
+    return partitioning.batch_shardings(mesh, batch_struct)

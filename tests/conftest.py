@@ -1,0 +1,22 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design -- smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def wmd_problem():
+    """Small synthetic WMD problem shared across core tests."""
+    rng = np.random.default_rng(0)
+    v, w, n, vr = 320, 24, 48, 11
+    vecs = rng.normal(size=(v, w)).astype(np.float32)
+    r = np.zeros(v, np.float32)
+    idx = rng.choice(v, vr, replace=False)
+    r[idx] = rng.random(vr).astype(np.float32)
+    r /= r.sum()
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        widx = rng.choice(v, rng.integers(4, 20), replace=False)
+        c[widx, j] = rng.random(widx.size).astype(np.float32)
+        c[:, j] /= c[:, j].sum()
+    return {"vecs": vecs, "r": r, "c": c, "lamb": 1.0, "iters": 12}

@@ -1,0 +1,148 @@
+"""Per-architecture smoke tests (assignment deliverable f): REDUCED config of
+the same family, one forward/train step on CPU, output shapes + no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import arch_ids, get_config, get_smoke_config
+from repro.models import build_model
+from repro.optim import adamw, constant
+from repro.train.step import init_state
+
+
+def _batch(cfg, rng, b=2, s=32):
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                 jnp.int32),
+           "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                 jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.encoder.num_positions
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(b, p, cfg.d_model)), jnp.float32)
+        out["tokens"] = out["tokens"][:, : s - p]
+        out["labels"] = out["labels"][:, : s - p]
+    if cfg.family == "audio":
+        f = cfg.encoder.num_positions
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(b, f, cfg.d_model)), jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_forward_loss(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, q_block=16, kv_block=16)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, np.random.default_rng(0))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_train_step(arch):
+    """One full optimizer step: params move, loss finite, no NaN params."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, q_block=16, kv_block=16)
+    opt = adamw(constant(1e-3))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    batch = _batch(cfg, np.random.default_rng(1))
+
+    @jax.jit
+    def step(state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        params, opt_state = opt.update(grads, state.opt, state.params)
+        return params, opt_state, loss
+
+    params2, _, loss = step(state, batch)
+    assert bool(jnp.isfinite(loss))
+    leaves_before = jax.tree.leaves(state.params)
+    leaves_after = jax.tree.leaves(params2)
+    moved = any(float(jnp.abs(a - b).max()) > 0
+                for a, b in zip(leaves_after, leaves_before))
+    assert moved, f"{arch}: params did not update"
+    assert all(bool(jnp.isfinite(x).all()) for x in leaves_after), \
+        f"{arch}: NaN/inf in updated params"
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_prefill_decode_consistency(arch):
+    """Decode after prefill == teacher-forced prefill at the same position.
+
+    MoE archs get a generous tolerance: near-tied router logits legitimately
+    flip expert choices between the two numerics paths (argmax must agree);
+    capacity factor is raised so drops don't dominate the comparison.
+    """
+    cfg = get_smoke_config(arch)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    model = build_model(cfg, q_block=8, kv_block=8, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    b, s1, s2, maxlen = 2, 16, 24, 32
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s2)), jnp.int32)
+    batch = {"tokens": toks[:, :s1], "labels": toks[:, :s1]}
+    if cfg.family == "vlm":
+        p = cfg.encoder.num_positions
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(b, p, cfg.d_model)), jnp.float32)
+    if cfg.family == "audio":
+        f = cfg.encoder.num_positions
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, f, cfg.d_model)), jnp.float32)
+
+    _, cache = model.prefill(params, batch, max_len=maxlen)
+    dec = jax.jit(model.decode)
+    for t in range(s1, s2):
+        logits_d, cache = dec(params, cache, toks[:, t:t + 1])
+    logits_ref, _ = model.prefill(params, dict(batch, tokens=toks),
+                                  max_len=maxlen)
+    a = np.asarray(logits_d, np.float32)
+    r = np.asarray(logits_ref, np.float32)
+    assert np.array_equal(np.argmax(a, -1), np.argmax(r, -1)), \
+        f"{arch}: decode/prefill argmax disagree"
+    tol = 5e-2 if cfg.moe is not None else 2e-2
+    rel = np.abs(a - r).max() / max(np.abs(r).max(), 1e-6)
+    assert rel < tol, f"{arch}: rel err {rel}"
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_full_config_exactness(arch):
+    """The FULL configs carry the exact published dims (exercised via
+    dry-run only; here we pin the numbers so edits can't drift)."""
+    cfg = get_config(arch)
+    expected = {
+        "mixtral-8x22b": (56, 6144, 48, 8, 32768),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 102400),
+        "xlstm-125m": (12, 768, 4, 4, 50304),
+        "paligemma-3b": (18, 2048, 8, 1, 257216),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 256000),
+        "minicpm3-4b": (62, 2560, 40, 40, 73448),
+        "olmo-1b": (16, 2048, 16, 16, 50304),
+        "gemma-2b": (18, 2048, 8, 1, 256000),
+        "starcoder2-3b": (30, 3072, 24, 2, 49152),
+        "whisper-small": (12, 768, 12, 12, 51865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.vocab_size)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_moe_details_pinned():
+    mix = get_config("mixtral-8x22b")
+    assert (mix.moe.num_experts, mix.moe.top_k) == (8, 2)
+    assert mix.attn_kind == "swa" and mix.window == 4096
+    ds = get_config("deepseek-moe-16b")
+    assert (ds.moe.num_experts, ds.moe.top_k, ds.moe.num_shared) == (64, 6, 2)
+    assert ds.moe.d_ff_expert == 1408
+    mc = get_config("minicpm3-4b")
+    assert (mc.mla.q_lora_rank, mc.mla.kv_lora_rank) == (768, 256)
+    rg = get_config("recurrentgemma-9b")
+    assert rg.block_pattern == ("rglru", "rglru", "attn")
+    assert rg.window == 2048

@@ -1,0 +1,115 @@
+"""Tests pinning the §Perf optimizations: length bucketing, doc-sharded WMD
+engine, absorbed MLA (covered in test_layers), grouped MoE dispatch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bucket_by_length, ell_from_dense, precompute,
+                        select_query, sinkhorn_wmd_sparse)
+from repro.core.sparse_sinkhorn import sinkhorn_wmd_sparse_pre
+
+
+def _problem(seed=0, v=256, w=16, n=48):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(v, w)).astype(np.float32)
+    r = np.zeros(v, np.float32)
+    idx = rng.choice(v, 9, replace=False)
+    h = rng.random(9) + 1e-2
+    r[idx] = (h / h.sum()).astype(np.float32)
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        k = rng.integers(2, 30)            # wide length spread -> buckets
+        widx = rng.choice(v, k, replace=False)
+        c[widx, j] = rng.random(k).astype(np.float32)
+        c[:, j] /= c[:, j].sum()
+    return vecs, r, c
+
+
+def test_bucketed_solve_matches_global():
+    """Per-bucket solve (shared precompute) == global-ELL solve, reassembled
+    into corpus order."""
+    vecs, r, c = _problem()
+    sel, r_sel = select_query(r)
+    ell = ell_from_dense(c)
+    ref = np.asarray(sinkhorn_wmd_sparse(sel, r_sel, jnp.asarray(ell.cols),
+                                         jnp.asarray(ell.vals), vecs,
+                                         1.0, 10))
+    bk = bucket_by_length(ell)
+    assert len(bk.buckets) >= 2             # spread actually bucketed
+    assert bk.total_slots < ell.cols.size   # padding actually reduced
+    pre = precompute(jnp.asarray(sel), jnp.asarray(r_sel),
+                     jnp.asarray(vecs), 1.0)
+    per_bucket = [np.asarray(sinkhorn_wmd_sparse_pre(
+        pre, jnp.asarray(b.cols), jnp.asarray(b.vals), 10))
+        for b in bk.buckets]
+    got = bk.scatter(per_bucket, ell.num_docs)
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=1e-5)
+
+
+def test_bucket_doc_ids_partition():
+    """Every doc appears in exactly one bucket."""
+    _, _, c = _problem(seed=3)
+    ell = ell_from_dense(c)
+    bk = bucket_by_length(ell)
+    all_ids = np.concatenate(bk.doc_ids)
+    assert sorted(all_ids.tolist()) == list(range(ell.num_docs))
+
+
+def test_bucket_nnz_preserved():
+    _, _, c = _problem(seed=4)
+    ell = ell_from_dense(c)
+    bk = bucket_by_length(ell)
+    assert bk.nnz == ell.nnz
+
+
+def test_moe_grouped_dispatch_matches_ungrouped_semantics():
+    """Grouped (per-batch-row) dispatch with ample capacity must equal a
+    token-by-token reference computation of the same routing."""
+    from repro.configs.base import ModelConfig, MoEConfig
+    from repro.models.layers import moe as moe_mod
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, head_dim=8, d_ff=0, vocab_size=64,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=12,
+                      capacity_factor=8.0))
+    params = moe_mod.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 8, 16)), jnp.float32)
+    out, _ = moe_mod.apply(cfg, params, x)
+
+    # token-by-token reference
+    xf = np.asarray(x).reshape(-1, 16)
+    logits = xf @ np.asarray(params["router"])
+    ids, weights, _ = moe_mod._gates(cfg.moe, jnp.asarray(logits))
+    ids, weights = np.asarray(ids), np.asarray(weights)
+    ref = np.zeros_like(xf)
+    wg = np.asarray(params["wi_gate"]); wu = np.asarray(params["wi_up"])
+    wo = np.asarray(params["wo"])
+    silu = lambda z: z / (1 + np.exp(-z))
+    for t in range(xf.shape[0]):
+        for j in range(cfg.moe.top_k):
+            e = ids[t, j]
+            h = silu(xf[t] @ wg[e]) * (xf[t] @ wu[e])
+            ref[t] += weights[t, j] * (h @ wo[e])
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, 16), ref,
+                               rtol=2e-3, atol=1e-4)
+
+
+def test_docsharded_engine_available():
+    """Doc-sharded engine builds and matches on a 1x1 mesh."""
+    from repro.core.distributed import build_wmd_fn_docsharded, pad_query
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    vecs, r, c = _problem(seed=6)
+    sel, r_sel = select_query(r)
+    ell = ell_from_dense(c)
+    ref = np.asarray(sinkhorn_wmd_sparse(sel, r_sel, jnp.asarray(ell.cols),
+                                         jnp.asarray(ell.vals), vecs,
+                                         1.0, 8))
+    sel_p, r_p, mask = pad_query(sel, r_sel, 16)
+    fn = build_wmd_fn_docsharded(mesh, lamb=1.0, max_iter=8)
+    got = np.asarray(fn(jnp.asarray(vecs[sel_p]), jnp.asarray(r_p),
+                        jnp.asarray(mask), jnp.asarray(vecs),
+                        jnp.asarray(ell.cols), jnp.asarray(ell.vals)))
+    np.testing.assert_allclose(got, ref, rtol=2e-3, atol=1e-5)

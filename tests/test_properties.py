@@ -1,0 +1,169 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cdist_matmul, ell_from_dense, pad_k, precompute,
+                        sinkhorn_plan)
+from repro.core import sparse_sinkhorn as ss
+from repro.core.formats import rebucket_for_vocab_shards
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+def _rand_hist(rng, n):
+    h = rng.random(n) + 1e-3
+    return (h / h.sum()).astype(np.float32)
+
+
+@_settings
+@given(st.integers(2, 24), st.integers(2, 24), st.integers(0, 1000))
+def test_sinkhorn_plan_marginals(n, m, seed):
+    """Transport plan marginals must match the inputs (Sinkhorn's defining
+    property -- this is what the fixed-point iteration enforces)."""
+    rng = np.random.default_rng(seed)
+    cost = rng.random((n, m)).astype(np.float32) * 3
+    a, b = _rand_hist(rng, n), _rand_hist(rng, m)
+    res = sinkhorn_plan(jnp.asarray(cost), jnp.asarray(a), jnp.asarray(b),
+                        lamb=5.0, max_iter=300)
+    plan = np.asarray(res.plan)
+    np.testing.assert_allclose(plan.sum(1), a, atol=2e-3)
+    np.testing.assert_allclose(plan.sum(0), b, atol=2e-3)
+    assert np.all(plan >= 0)
+
+
+@_settings
+@given(st.integers(2, 16), st.integers(0, 1000))
+def test_sinkhorn_distance_symmetry(n, seed):
+    """d(a,b) == d(b,a) for symmetric cost (Cuturi: Sinkhorn dist is a
+    metric)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 3)).astype(np.float32)
+    cost = np.asarray(cdist_matmul(jnp.asarray(pts), jnp.asarray(pts)))
+    a, b = _rand_hist(rng, n), _rand_hist(rng, n)
+    d_ab = sinkhorn_plan(jnp.asarray(cost), jnp.asarray(a), jnp.asarray(b),
+                         lamb=8.0, max_iter=200).cost
+    d_ba = sinkhorn_plan(jnp.asarray(cost.T), jnp.asarray(b),
+                         jnp.asarray(a), lamb=8.0, max_iter=200).cost
+    np.testing.assert_allclose(float(d_ab), float(d_ba), rtol=1e-3)
+
+
+@_settings
+@given(st.integers(3, 12), st.integers(0, 500))
+def test_sinkhorn_self_distance_minimal(n, seed):
+    """d(a, a) <= d(a, b) for any b (approximate identity property)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 3)).astype(np.float32) * 2
+    cost = np.asarray(cdist_matmul(jnp.asarray(pts), jnp.asarray(pts)))
+    a, b = _rand_hist(rng, n), _rand_hist(rng, n)
+    d_aa = float(sinkhorn_plan(jnp.asarray(cost), jnp.asarray(a),
+                               jnp.asarray(a), lamb=20.0,
+                               max_iter=300).cost)
+    d_ab = float(sinkhorn_plan(jnp.asarray(cost), jnp.asarray(a),
+                               jnp.asarray(b), lamb=20.0,
+                               max_iter=300).cost)
+    assert d_aa <= d_ab + 1e-4
+
+
+@_settings
+@given(st.integers(8, 64), st.integers(2, 12), st.integers(0, 99))
+def test_ell_dense_roundtrip(v, n, seed):
+    rng = np.random.default_rng(seed)
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        k = rng.integers(1, max(v // 4, 2))
+        idx = rng.choice(v, k, replace=False)
+        c[idx, j] = rng.random(k).astype(np.float32)
+    ell = ell_from_dense(c)
+    np.testing.assert_allclose(ell.to_dense(), c)
+    assert ell.nnz == (c != 0).sum()
+
+
+@_settings
+@given(st.sampled_from([2, 4, 8]), st.integers(0, 99))
+def test_rebucket_preserves_nonzeros(shards, seed):
+    """Vocab re-bucketing is a partition: every nonzero lands in exactly one
+    shard with a correctly localized id."""
+    rng = np.random.default_rng(seed)
+    v, n = 64, 10
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        idx = rng.choice(v, rng.integers(1, 12), replace=False)
+        c[idx, j] = rng.random(idx.size).astype(np.float32)
+    ell = ell_from_dense(c)
+    rb = rebucket_for_vocab_shards(ell, shards)
+    vloc = v // shards
+    rebuilt = np.zeros_like(c)
+    for s in range(shards):
+        for j in range(n):
+            live = rb.vals[s, j] != 0
+            np.add.at(rebuilt[:, j],
+                      rb.cols[s, j][live] + s * vloc, rb.vals[s, j][live])
+    np.testing.assert_allclose(rebuilt, c)
+
+
+@_settings
+@given(st.integers(0, 200))
+def test_fused_equals_unfused(seed):
+    """The paper's central claim: fusion changes performance, not results."""
+    rng = np.random.default_rng(seed)
+    v, w, n, vr = 96, 8, 12, 5
+    vecs = rng.normal(size=(v, w)).astype(np.float32)
+    sel = rng.choice(v, vr, replace=False).astype(np.int32)
+    r_sel = _rand_hist(rng, vr)
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        idx = rng.choice(v, rng.integers(2, 9), replace=False)
+        c[idx, j] = rng.random(idx.size).astype(np.float32)
+        c[:, j] /= c[:, j].sum()
+    ell = ell_from_dense(c)
+    pre = precompute(jnp.asarray(sel), jnp.asarray(r_sel),
+                     jnp.asarray(vecs), 1.0)
+    k_pad = pad_k(pre.K)
+    u = jnp.asarray(rng.random((vr, n)).astype(np.float32) + 0.5)
+    cols, vals = jnp.asarray(ell.cols), jnp.asarray(ell.vals)
+    fused = ss.sddmm_spmm_type1(k_pad, pre.r, u, cols, vals)
+    v_ = ss.sddmm(k_pad, u, cols, vals)
+    unfused = ss.spmm(k_pad / pre.r[:, None], v_, cols)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-7)
+
+
+@_settings
+@given(st.integers(1, 6), st.integers(0, 50))
+def test_query_padding_exact(pad_extra, seed):
+    """Mask-based query padding must not change the distances at all."""
+    from repro.core.distributed import pad_query
+    from repro.core import sinkhorn_wmd_sparse, select_query
+    rng = np.random.default_rng(seed)
+    v, w, n, vr = 80, 8, 10, 6
+    vecs = rng.normal(size=(v, w)).astype(np.float32)
+    r = np.zeros(v, np.float32)
+    idx = rng.choice(v, vr, replace=False)
+    r[idx] = _rand_hist(rng, vr)
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        widx = rng.choice(v, rng.integers(2, 9), replace=False)
+        c[widx, j] = rng.random(widx.size).astype(np.float32)
+        c[:, j] /= c[:, j].sum()
+    ell = ell_from_dense(c)
+    sel, r_sel = select_query(r)
+    cols, vals = jnp.asarray(ell.cols), jnp.asarray(ell.vals)
+    base = np.asarray(sinkhorn_wmd_sparse(sel, r_sel, cols, vals, vecs,
+                                          1.0, 8))
+    # padded query: extra rows with r=1, zeroed K rows via mask -> identical
+    sel_p, r_p, mask = pad_query(sel, r_sel, vr + pad_extra)
+    from repro.core.distributed import masked_k
+    from repro.core.sparse_sinkhorn import (pad_k as _pad_k,
+                                            sinkhorn_wmd_sparse_pre)
+    from repro.core.sinkhorn import SinkhornPrecompute
+    k, km = masked_k(jnp.asarray(vecs[sel_p]), jnp.asarray(vecs), 1.0,
+                     jnp.asarray(mask))
+    pre = SinkhornPrecompute(K=k, K_over_r=k / jnp.asarray(r_p)[:, None],
+                             KM=km, r=jnp.asarray(r_p))
+    padded = np.asarray(sinkhorn_wmd_sparse_pre(pre, cols, vals, 8))
+    # padding changes x0 from 1/v_r to 1/(v_r+pad); the Sinkhorn map is
+    # 1-homogeneous so the WMD is scale-invariant analytically -- the
+    # residual is f32 rounding drift over the iterations, not leakage from
+    # the pad rows (those are exactly zeroed by the K-row mask).
+    np.testing.assert_allclose(padded, base, rtol=2e-3, atol=1e-5)

@@ -1,0 +1,92 @@
+"""Property-based tests on the recurrent layers' algebraic invariants:
+chunkwise mLSTM == step recurrence for random gates/chunks; RG-LRU
+associative-scan composition; state-passing consistency (prefill in two
+halves == one pass)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers.xlstm import mlstm_chunkwise, mlstm_recurrent
+
+_settings = settings(max_examples=15, deadline=None)
+
+
+def _mlstm_inputs(rng, b, h, t, hd):
+    q = jnp.asarray(rng.normal(size=(b, h, t, hd)), jnp.float32) * hd ** -0.5
+    k = jnp.asarray(rng.normal(size=(b, h, t, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, hd)), jnp.float32)
+    li = jnp.asarray(rng.normal(size=(b, h, t)) * 2, jnp.float32)
+    lf = jnp.asarray(
+        np.log(1 / (1 + np.exp(-rng.normal(size=(b, h, t)) - 2))),
+        jnp.float32)
+    return q, k, v, li, lf
+
+
+@_settings
+@given(st.sampled_from([8, 16, 32, 64]), st.integers(0, 500))
+def test_mlstm_chunkwise_matches_recurrent(chunk, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v, li, lf = _mlstm_inputs(rng, b=1, h=2, t=64, hd=8)
+    h_ref, (c_r, n_r, m_r) = mlstm_recurrent(q, k, v, li, lf)
+    h_ck, (c_c, n_c, m_c) = mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(h_ck), np.asarray(h_ref),
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(m_c), np.asarray(m_r), atol=1e-4)
+
+
+@_settings
+@given(st.integers(0, 500))
+def test_mlstm_state_passing_split(seed):
+    """Running two half-sequences with carried state == one full pass."""
+    rng = np.random.default_rng(seed)
+    q, k, v, li, lf = _mlstm_inputs(rng, b=1, h=2, t=64, hd=8)
+    h_full, st_full = mlstm_chunkwise(q, k, v, li, lf, chunk=16)
+    h1, st1 = mlstm_chunkwise(q[:, :, :32], k[:, :, :32], v[:, :, :32],
+                              li[:, :, :32], lf[:, :, :32], chunk=16)
+    h2, st2 = mlstm_chunkwise(q[:, :, 32:], k[:, :, 32:], v[:, :, 32:],
+                              li[:, :, 32:], lf[:, :, 32:], chunk=16,
+                              state=st1)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([h1, h2], axis=2)),
+        np.asarray(h_full), atol=2e-3)
+    for a, b in zip(st2, st_full):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+@_settings
+@given(st.integers(0, 500))
+def test_rglru_scan_operator_associative(seed):
+    """The (a, b) combine operator used in the associative scan must be
+    associative (required for lax.associative_scan correctness)."""
+    rng = np.random.default_rng(seed)
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+    es = [(rng.random(4).astype(np.float64),
+           rng.normal(size=4).astype(np.float64)) for _ in range(3)]
+    left = combine(combine(es[0], es[1]), es[2])
+    right = combine(es[0], combine(es[1], es[2]))
+    np.testing.assert_allclose(left[0], right[0], rtol=1e-12)
+    np.testing.assert_allclose(left[1], right[1], rtol=1e-10, atol=1e-12)
+
+
+@_settings
+@given(st.integers(0, 300))
+def test_rglru_prefill_decode_state_consistency(seed):
+    """Prefill state (return_state) == decoding the same tokens stepwise."""
+    from repro.configs import get_smoke_config
+    from repro.models.layers import rglru as rg
+    cfg = get_smoke_config("recurrentgemma-9b")
+    params = rg.init(jax.random.PRNGKey(seed % 7), cfg)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, 6, cfg.d_model)) * 0.5, jnp.float32)
+    _, st_full = rg.fwd_full(cfg, params, x, return_state=True)
+    st = rg.init_state(cfg, 1)
+    for t in range(6):
+        _, st = rg.fwd_decode(cfg, params, x[:, t:t + 1], st)
+    np.testing.assert_allclose(np.asarray(st.h), np.asarray(st_full.h),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st.conv),
+                               np.asarray(st_full.conv), atol=1e-5)
