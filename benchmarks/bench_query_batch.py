@@ -1,0 +1,114 @@
+"""Multi-query batching throughput: batched (Q, v_r, N) engine vs the
+sequential per-query dispatch loop.
+
+    PYTHONPATH=src python benchmarks/bench_query_batch.py [--tiny] \
+        [--out BENCH_query_batch.json]
+
+For each Q the sequential baseline replays `WMDService.query` Q times
+(re-gathering K, re-running precompute, and paying one program dispatch per
+query); the batched path runs ONE device program with a single batched ELL
+gather per iteration. Emits ``name,us_per_call,derived`` CSV rows (the
+harness idiom) and writes a JSON artifact for the perf trajectory
+(`BENCH_*.json`, uploaded by the nightly CI smoke job).
+
+Default shape is the low-latency serving regime (small per-query corpus
+slice, short queries): there, per-query dispatch + precompute rivals solve
+compute and batching amortizes both, giving the >= 2x throughput target at
+Q = 16 on CPU. At bulk shapes (--docs/--vocab up) the solve is
+gather-bandwidth-bound and K differs per query, so CPU batching converges
+toward parity -- the win at those shapes is the collective amortization on
+real meshes (one psum per iteration regardless of Q), which this single-host
+bench cannot show.
+
+Self-contained on purpose (no benchmarks.common import): CI invokes it as a
+script with only the installed `repro` package on the path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def bench(svc, queries, *, warmup: int = 1, repeat: int = 3):
+    """Median wall seconds of sequential vs batched dispatch of ``queries``."""
+    def run(fn):
+        for _ in range(warmup):
+            fn(queries)
+        ts = []
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            fn(queries)
+            ts.append(time.perf_counter() - t0)
+        ts.sort()
+        return ts[len(ts) // 2]
+
+    return run(svc.query_batch_sequential), run(svc.query_batch)
+
+
+def run(*, vocab: int = 1024, docs: int = 128, qs=(1, 4, 16, 64),
+        mean_words: float = 8.0, query_words: int = 13, v_r: int = 16,
+        out: str | None = None) -> dict:
+    import numpy as np
+    from repro.configs.sinkhorn_wmd import WMDConfig
+    from repro.data import make_corpus
+    from repro.launch.mesh import make_mesh
+    from repro.serving import WMDService
+
+    cfg = WMDConfig(name="bench-qbatch", vocab_size=vocab, embed_dim=64,
+                    num_docs=docs, nnz_max=64, v_r=v_r, lamb=1.0, max_iter=15)
+    data = make_corpus(vocab_size=vocab, embed_dim=cfg.embed_dim,
+                       num_docs=docs, num_queries=max(qs),
+                       query_words=query_words, mean_words=mean_words,
+                       seed=0)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
+
+    results = {"vocab": vocab, "docs": docs, "v_r": cfg.v_r,
+               "nnz_max": data.ell.nnz_max, "max_iter": cfg.max_iter,
+               "points": []}
+    for q in qs:
+        queries = data.queries[:q]
+        # correctness gate before timing: batched must match the oracle
+        err = float(np.abs(svc.query_batch(queries)
+                           - svc.query_batch_sequential(queries)).max())
+        t_seq, t_bat = bench(svc, queries)
+        qps_seq, qps_bat = q / t_seq, q / t_bat
+        speedup = t_seq / t_bat
+        print(f"qbatch/Q{q},{t_bat / q * 1e6:.1f},"
+              f"qps_batched={qps_bat:.1f}:qps_seq={qps_seq:.1f}:"
+              f"speedup={speedup:.2f}x")
+        results["points"].append({
+            "Q": q, "t_seq_s": t_seq, "t_batched_s": t_bat,
+            "qps_seq": qps_seq, "qps_batched": qps_bat,
+            "speedup": speedup, "max_abs_err": err,
+        })
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {out}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--docs", type=int, default=128)
+    ap.add_argument("--mean-words", type=float, default=8.0)
+    ap.add_argument("--query-words", type=int, default=13)
+    ap.add_argument("--v-r", type=int, default=16)
+    ap.add_argument("--qs", type=int, nargs="+", default=[1, 4, 16, 64])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape (small corpus, Q <= 8)")
+    ap.add_argument("--out", default="BENCH_query_batch.json")
+    args = ap.parse_args()
+    if args.tiny:
+        run(vocab=512, docs=64, qs=(1, 4, 8), out=args.out)
+    else:
+        run(vocab=args.vocab, docs=args.docs, qs=tuple(args.qs),
+            mean_words=args.mean_words, query_words=args.query_words,
+            v_r=args.v_r, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,7 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_asymptotic, bench_fusion, bench_hotspots,
                             bench_impl_comparison, bench_kernels,
-                            bench_padding, bench_scaling)
+                            bench_padding, bench_query_batch, bench_scaling)
     print("name,us_per_call,derived")
     modules = [
         ("fig8", bench_impl_comparison),
@@ -21,6 +21,7 @@ def main() -> None:
         ("table2", bench_asymptotic),
         ("kernels", bench_kernels),
         ("padding", bench_padding),
+        ("qbatch", bench_query_batch),
     ]
     failed = []
     for name, mod in modules:

@@ -17,6 +17,9 @@ def main():
     ap.add_argument("--docs", type=int, default=512)
     ap.add_argument("--vocab", type=int, default=4096)
     ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--batch-queries", action="store_true",
+                    help="solve all queries in one batched (Q, v_r, N) "
+                         "program and report throughput vs the loop")
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -45,6 +48,26 @@ def main():
     svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
     print(f"corpus loaded+sharded in {time.perf_counter() - t0:.2f}s "
           f"(nnz={data.nnz})")
+
+    if args.batch_queries:
+        # compile BOTH paths outside timing so the A/B compares solves only
+        svc.query_batch(data.queries)
+        svc.query_batch_sequential(data.queries)
+        t0 = time.perf_counter()
+        dists = svc.query_batch(data.queries)
+        dt_b = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        svc.query_batch_sequential(data.queries)
+        dt_s = time.perf_counter() - t0
+        for i, d in enumerate(dists):
+            idx = np.argsort(d)[:3]
+            print(f"query {i}: top3={idx.tolist()} "
+                  f"d={np.round(d[idx], 3).tolist()}")
+        q = len(data.queries)
+        print(f"batched Q={q}: {dt_b * 1e3:.1f} ms ({q / dt_b:.1f} q/s) "
+              f"vs sequential {dt_s * 1e3:.1f} ms ({q / dt_s:.1f} q/s) "
+              f"-> {dt_s / dt_b:.2f}x")
+        return
 
     lat = []
     for i, q in enumerate(data.queries):

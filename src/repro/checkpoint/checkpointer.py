@@ -1,8 +1,11 @@
-"""Sharded, async, elastic checkpointing (msgpack + zstd, no orbax).
+"""Sharded, async, elastic checkpointing (msgpack, optionally zstd; no orbax).
 
 Layout per step:  <dir>/step_<n>/
     meta.json            step, mesh signature, tree structure hash
-    shard_<p>.msgpack.zst  one file per host process (this container: p=0)
+    shard_<p>.msgpack[.zst]  one file per host process (this container: p=0);
+                         ``.zst`` when the optional ``zstandard`` codec is
+                         installed, plain msgpack otherwise (restore handles
+                         both, but reading a ``.zst`` shard requires the dep)
 
 Properties required at 1000+-node scale (DESIGN.md section 7):
   * **atomic**: written to ``step_<n>.tmp`` then renamed -- a crashed writer
@@ -29,7 +32,11 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dep (`pip install .[zstd]`): fall back to uncompressed
+    import zstandard
+except ImportError:
+    zstandard = None
 
 _COMPRESS_LEVEL = 3
 
@@ -83,12 +90,19 @@ class AsyncCheckpointer:
 def _write(ckpt_dir, step, host: dict, tree_sig, mesh_sig, proc) -> str:
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
-    cctx = zstandard.ZstdCompressor(level=_COMPRESS_LEVEL)
+    if os.path.exists(tmp):  # leftovers from a crashed writer (possibly a
+        import shutil        # different codec) must not leak into this save
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
     payload = {k: {"dtype": str(v.dtype), "shape": list(v.shape),
                    "data": v.tobytes()} for k, v in host.items()}
-    blob = cctx.compress(msgpack.packb(payload, use_bin_type=True))
-    with open(os.path.join(tmp, f"shard_{proc}.msgpack.zst"), "wb") as f:
+    blob = msgpack.packb(payload, use_bin_type=True)
+    if zstandard is not None:
+        blob = zstandard.ZstdCompressor(level=_COMPRESS_LEVEL).compress(blob)
+        shard_name = f"shard_{proc}.msgpack.zst"
+    else:
+        shard_name = f"shard_{proc}.msgpack"
+    with open(os.path.join(tmp, shard_name), "wb") as f:
         f.write(blob)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "tree_signature": tree_sig,
@@ -127,10 +141,19 @@ def restore(ckpt_dir: str, step: int, like: Any, *,
     if meta["tree_signature"] != _tree_signature(like):
         raise ValueError("checkpoint tree does not match restore target "
                          "(structure changed?)")
-    dctx = zstandard.ZstdDecompressor()
-    with open(os.path.join(path, f"shard_{process_index}.msgpack.zst"),
-              "rb") as f:
-        payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+    raw_path = os.path.join(path, f"shard_{process_index}.msgpack")
+    zst_path = raw_path + ".zst"
+    if os.path.exists(zst_path):
+        if zstandard is None:
+            raise RuntimeError(
+                f"{zst_path} is zstd-compressed but zstandard is not "
+                "installed (pip install .[zstd])")
+        with open(zst_path, "rb") as f:
+            blob = zstandard.ZstdDecompressor().decompress(f.read())
+    else:
+        with open(raw_path, "rb") as f:
+            blob = f.read()
+    payload = msgpack.unpackb(blob, raw=False)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     shard_flat = (jax.tree_util.tree_flatten(shardings)[0]

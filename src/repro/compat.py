@@ -1,0 +1,45 @@
+"""Version compatibility shims for the jax API surface this repo uses.
+
+The codebase targets current jax (`jax.shard_map`, `jax.sharding.AxisType`,
+``check_vma=``); CI and some containers pin older CPU jax where those names
+live elsewhere (`jax.experimental.shard_map.shard_map`, no axis types,
+``check_rep=``). Everything version-dependent is funneled through here so the
+rest of the code imports one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """`jax.shard_map` with fallback to `jax.experimental.shard_map`.
+
+    Older jax calls the replication-checking flag ``check_rep``; newer jax
+    renamed it ``check_vma``. Semantics at False are equivalent (skip the
+    check), which is the only way this repo calls it.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """`jax.make_mesh` with explicit Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def abstract_mesh(shape, axes) -> "jax.sharding.AbstractMesh":
+    """`jax.sharding.AbstractMesh` across the constructor signature change:
+    new jax takes (sizes, names, axis_types=...), old jax one shape tuple."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.sharding.AbstractMesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))

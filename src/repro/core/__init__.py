@@ -16,10 +16,17 @@ from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
                                 rebucket_for_vocab_shards)
 from repro.core.sinkhorn import (SinkhornPrecompute, precompute, select_query,
                                  sinkhorn_wmd_dense)
-from repro.core.sparse_sinkhorn import (pad_k, sddmm, spmm, sddmm_spmm_type1,
-                                        sddmm_spmm_type2, sinkhorn_wmd_sparse)
+from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute, pad_k,
+                                        precompute_batch, sddmm, spmm,
+                                        sddmm_spmm_type1, sddmm_spmm_type2,
+                                        sddmm_spmm_type1_batch,
+                                        sddmm_spmm_type2_batch,
+                                        sinkhorn_wmd_sparse,
+                                        sinkhorn_wmd_sparse_batch)
 from repro.core.ot import SinkhornResult, sinkhorn_divergence, sinkhorn_plan
-from repro.core.convergence import ConvergedWMD, sinkhorn_wmd_converged
+from repro.core.convergence import (BatchConvergedWMD, ConvergedWMD,
+                                    sinkhorn_wmd_converged,
+                                    sinkhorn_wmd_converged_batch)
 
 __all__ = [
     "cdist", "cdist_direct", "cdist_matmul",
@@ -29,6 +36,10 @@ __all__ = [
     "SinkhornPrecompute", "precompute", "select_query", "sinkhorn_wmd_dense",
     "pad_k", "sddmm", "spmm", "sddmm_spmm_type1", "sddmm_spmm_type2",
     "sinkhorn_wmd_sparse",
+    "BatchedSinkhornPrecompute", "precompute_batch",
+    "sddmm_spmm_type1_batch", "sddmm_spmm_type2_batch",
+    "sinkhorn_wmd_sparse_batch",
     "SinkhornResult", "sinkhorn_divergence", "sinkhorn_plan",
     "ConvergedWMD", "sinkhorn_wmd_converged",
+    "BatchConvergedWMD", "sinkhorn_wmd_converged_batch",
 ]

@@ -15,8 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sinkhorn import precompute
-from repro.core.sparse_sinkhorn import (pad_k, safe_recip,
-                                        sddmm_spmm_type1, sddmm_spmm_type2)
+from repro.core.sparse_sinkhorn import (pad_k, precompute_batch, safe_recip,
+                                        sddmm_spmm_type1, sddmm_spmm_type2,
+                                        sddmm_spmm_type1_batch,
+                                        sddmm_spmm_type2_batch)
 
 
 class ConvergedWMD(NamedTuple):
@@ -54,3 +56,58 @@ def sinkhorn_wmd_converged(sel_idx: jax.Array, r_sel: jax.Array,
         cond, body, (x0, jnp.asarray(jnp.inf, x0.dtype), jnp.asarray(0)))
     wmd = sddmm_spmm_type2(k_pad, km_pad, safe_recip(x), cols, vals)
     return ConvergedWMD(wmd=wmd, n_iter=n_iter, delta=delta)
+
+
+class BatchConvergedWMD(NamedTuple):
+    wmd: jax.Array     # (Q, N) distances
+    n_iter: jax.Array  # (Q,) iterations each query actually ran
+    delta: jax.Array   # (Q,) final per-query relative |dx|_inf
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter",))
+def sinkhorn_wmd_converged_batch(sel_idx: jax.Array, r_sel: jax.Array,
+                                 cols: jax.Array, vals: jax.Array,
+                                 vecs: jax.Array, lamb: float, max_iter: int,
+                                 tol: float = 1e-6,
+                                 row_mask: jax.Array | None = None
+                                 ) -> BatchConvergedWMD:
+    """Batched early-exit solve with **per-query convergence masking**.
+
+    All Q queries advance through the shared-gather batched iteration, but a
+    query whose relative iterate delta drops below ``tol`` is *frozen*: its x
+    block is carried forward unchanged (`jnp.where` on the per-query active
+    mask) while stragglers keep iterating. Freezing is exact -- a frozen
+    query's trajectory is bit-identical to one that stopped at its own
+    convergence point, because queries never interact. The loop exits when
+    every query has converged or at ``max_iter``.
+
+    sel_idx/r_sel/row_mask are (Q, v_r) bucketed queries (see pad_query).
+    """
+    pre = precompute_batch(sel_idx, r_sel, vecs, lamb, row_mask)
+    k_pad = pad_k(pre.K)
+    km_pad = pad_k(pre.KM)
+    q, v_r = r_sel.shape
+    n = cols.shape[0]
+    x0 = jnp.full((q, v_r, n), 1.0 / v_r, dtype=pre.K.dtype)
+
+    def cond(carry):
+        _, delta, _, it = carry
+        return (it < max_iter) & jnp.any(delta >= tol)
+
+    def body(carry):
+        x, delta, n_iter, it = carry
+        active = delta >= tol                              # (Q,)
+        x_new = sddmm_spmm_type1_batch(k_pad, pre.r, safe_recip(x),
+                                       cols, vals)
+        rel = jnp.max(jnp.abs(x_new - x) / (jnp.abs(x) + 1e-30),
+                      axis=(1, 2))                         # per-query delta
+        x = jnp.where(active[:, None, None], x_new, x)     # freeze converged
+        delta = jnp.where(active, rel, delta)
+        n_iter = n_iter + active.astype(n_iter.dtype)
+        return x, delta, n_iter, it + 1
+
+    x, delta, n_iter, _ = jax.lax.while_loop(
+        cond, body, (x0, jnp.full((q,), jnp.inf, x0.dtype),
+                     jnp.zeros((q,), jnp.int32), jnp.asarray(0)))
+    wmd = sddmm_spmm_type2_batch(k_pad, km_pad, safe_recip(x), cols, vals)
+    return BatchConvergedWMD(wmd=wmd, n_iter=n_iter, delta=delta)

@@ -28,7 +28,6 @@ epsilon approximations.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -36,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.cost_matrix import cdist
 from repro.core.sparse_sinkhorn import pad_k, safe_recip
 from repro.core import sparse_sinkhorn as ss
@@ -62,11 +62,30 @@ def pad_query(sel_idx: np.ndarray, r_sel: np.ndarray, v_r_target: int
     return sel_p, r_p, mask
 
 
+def pad_query_batch(sels: Sequence[np.ndarray], rs: Sequence[np.ndarray],
+                    v_r_target: int
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Bucket Q mixed-size queries to a common v_r. Returns (Q, v_r) arrays
+    (sel_idx, r_sel, row_mask) -- each query padded by `pad_query`, stacked."""
+    padded = [pad_query(s, r, v_r_target) for s, r in zip(sels, rs)]
+    return (np.stack([p[0] for p in padded]),
+            np.stack([p[1] for p in padded]),
+            np.stack([p[2] for p in padded]))
+
+
 def masked_k(vecs_sel: jax.Array, vecs_loc: jax.Array, lamb: float,
              row_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Local K / K.*M stripes with padded query rows zeroed."""
     m = cdist(vecs_sel, vecs_loc)                      # (v_r, Vloc)
     k = jnp.exp(-lamb * m) * row_mask[:, None]
+    return k, k * m
+
+
+def masked_k_batch(vecs_sel: jax.Array, vecs_loc: jax.Array, lamb: float,
+                   row_mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Batched local stripes: (Q, v_r, w) queries -> (Q, v_r, Vloc) K, K.*M."""
+    m = jax.vmap(lambda a: cdist(a, vecs_loc))(vecs_sel)
+    k = jnp.exp(-lamb * m) * row_mask[..., None]
     return k, k * m
 
 
@@ -144,8 +163,66 @@ def build_wmd_fn(mesh: Mesh, *, lamb: float, max_iter: int,
                             cols_loc, vals_loc, lamb=lamb, max_iter=max_iter,
                             model_axis=model_axis, use_kernel=use_kernel)
 
-    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
+
+
+def build_wmd_batch_fn(mesh: Mesh, *, lamb: float, max_iter: int,
+                       doc_axes: Sequence[str] = ("data",),
+                       model_axis: str = "model"):
+    """Build the jit'd multi-query batched WMD solver for ``mesh``.
+
+    The (Q, v_r, N) analogue of `build_wmd_fn`: per iteration, every device
+    performs ONE shared ELL gather feeding all Q queries' SDDMM and SpMM
+    contractions (`sddmm_spmm_type1_batch`), and the Q solves share the same
+    single psum over ``model`` -- collective count per iteration is
+    independent of Q, so batching amortizes both the gather and the
+    communication latency.
+
+    The returned fn takes (vecs_sel, r_sel, row_mask, vecs, cols_b, vals_b):
+      vecs_sel (Q, v_r, w)           replicated -- bucketed query embeddings
+      r_sel    (Q, v_r)              replicated    (pad rows = 1.0)
+      row_mask (Q, v_r)              replicated    (pad rows = 0.0)
+      vecs     (V, w)                P(model)
+      cols_b   (S_model, N, nnz_loc) P(model, doc_axes)
+      vals_b   (S_model, N, nnz_loc) P(model, doc_axes)
+    and returns wmd (Q, N) with the doc axis sharded over doc_axes.
+
+    Retracing happens per distinct Q; callers bound it by bucketing Q
+    (see serving.wmd_service admission).
+    """
+    in_specs = (P(None, None, None), P(None, None), P(None, None),
+                P(model_axis, None),
+                P(model_axis, *[tuple(doc_axes)], None),
+                P(model_axis, *[tuple(doc_axes)], None))
+    out_specs = P(None, tuple(doc_axes))
+
+    def per_device(vecs_sel, r_sel, row_mask, vecs_loc, cols_b, vals_b):
+        cols_loc = cols_b[0]
+        vals_loc = vals_b[0]
+        k, km = masked_k_batch(vecs_sel, vecs_loc, lamb, row_mask)
+        k_pad, km_pad = pad_k(k), pad_k(km)
+        q, v_r = r_sel.shape
+        n_loc = cols_loc.shape[0]
+        ones_r = jnp.ones_like(r_sel)
+
+        def body(_, x):
+            u = safe_recip(x)
+            x_part = ss.sddmm_spmm_type1_batch(k_pad, ones_r, u,
+                                               cols_loc, vals_loc)
+            x_full = jax.lax.psum(x_part, model_axis)  # THE collective
+            return x_full / r_sel[:, :, None]
+
+        x0 = jnp.full((q, v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
+        x = jax.lax.fori_loop(0, max_iter, body, x0)
+        u = safe_recip(x)
+        wmd_part = ss.sddmm_spmm_type2_batch(k_pad, km_pad, u,
+                                             cols_loc, vals_loc)
+        return jax.lax.psum(wmd_part, model_axis)
+
+    fn = shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
     return jax.jit(fn)
 
 
@@ -188,8 +265,8 @@ def build_wmd_fn_docsharded(mesh: Mesh, *, lamb: float, max_iter: int,
             return ops.sddmm_spmm_type2(k_pad, km_pad, u, cols_loc, vals_loc)
         return ss.sddmm_spmm_type2(k_pad, km_pad, u, cols_loc, vals_loc)
 
-    fn = jax.shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                       out_specs=P(all_axes), check_vma=False)
+    fn = shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                   out_specs=P(all_axes), check_vma=False)
     return jax.jit(fn)
 
 

@@ -27,10 +27,12 @@ All paths consume K padded with one trailing zero column so ELL pad slots
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost_matrix import cdist
 from repro.core.sinkhorn import SinkhornPrecompute, precompute
 
 _IMPLS = ("fused", "unfused", "kernel")
@@ -47,8 +49,13 @@ def safe_recip(x: jax.Array) -> jax.Array:
 
 
 def pad_k(k: jax.Array) -> jax.Array:
-    """Append a zero column: gathers of the ELL pad id (== V) read zeros."""
-    return jnp.pad(k, ((0, 0), (0, 1)))
+    """Append a zero column: gathers of the ELL pad id (== V) read zeros.
+
+    Works on both (v_r, V) single-query and (Q, v_r, V) batched stripes --
+    the pad column is always appended on the vocab (last) axis.
+    """
+    widths = [(0, 0)] * (k.ndim - 1) + [(0, 1)]
+    return jnp.pad(k, widths)
 
 
 # ---------------------------------------------------------------------------
@@ -159,3 +166,116 @@ def sinkhorn_wmd_sparse_pre(pre: SinkhornPrecompute, cols: jax.Array,
     x = jax.lax.fori_loop(0, max_iter, body, x0)
     u = safe_recip(x)
     return _final(impl, k_pad, km_pad, u, cols, vals)
+
+
+# ---------------------------------------------------------------------------
+# Multi-query batched engine: (Q, v_r, N) with ONE shared ELL gather
+# ---------------------------------------------------------------------------
+#
+# The paper batches one query against N docs; the production axis on top of
+# that is Q concurrent queries. The ELL structure (cols, vals) is a property
+# of the *corpus*, identical for every query, so the irregular part of the
+# iteration -- the gather of K columns at the nonzero word-ids -- becomes ONE
+# batched gather op serving all Q queries (same index set, Q stripes), laid
+# out (Q, N, nnz, v_r) so both downstream contractions consume it without
+# transposing (see gather_k_batch). Everything downstream is dense einsum
+# with a leading Q batch axis.
+#
+# Mixed-size queries ride the exact mask-based padding of core.distributed:
+# pad rows carry r = 1 and a zeroed K row, so they contribute exactly zero
+# to every w, x and WMD (no epsilon approximations).
+
+
+class BatchedSinkhornPrecompute(NamedTuple):
+    """Per-query iteration-invariant stripes, stacked on a leading Q axis."""
+
+    K: jax.Array   # (Q, v_r, V) exp(-lambda * M), pad rows zeroed
+    KM: jax.Array  # (Q, v_r, V) K .* M
+    r: jax.Array   # (Q, v_r) pad rows carry 1.0
+
+
+def precompute_batch(sel_idx: jax.Array, r_sel: jax.Array, vecs: jax.Array,
+                     lamb: float, row_mask: jax.Array | None = None
+                     ) -> BatchedSinkhornPrecompute:
+    """Batched K / K.*M stripes for Q queries bucketed to a common v_r.
+
+    Args:
+      sel_idx:  (Q, v_r) word ids per query (pad slots point at word 0).
+      r_sel:    (Q, v_r) frequencies (pad rows = 1.0, see pad_query).
+      vecs:     (V, w) embeddings.
+      row_mask: (Q, v_r) 1.0 for real rows, 0.0 for pad rows; None = all real.
+    """
+    m = jax.vmap(lambda a: cdist(a, vecs))(vecs[sel_idx])    # (Q, v_r, V)
+    k = jnp.exp(-lamb * m)
+    if row_mask is not None:
+        k = k * row_mask[..., None]
+    return BatchedSinkhornPrecompute(K=k, KM=k * m, r=r_sel)
+
+
+def gather_k_batch(k_pad: jax.Array, cols: jax.Array) -> jax.Array:
+    """One batched gather serving all Q queries.
+
+    (Q, v_r, V+1), (N, nnz) -> (Q, N, nnz, v_r): one gather op whose batch
+    dims (q, n) lead, so both downstream contractions consume it with NO
+    transposition of the large tensor (the (N, nnz, Q, v_r) alternative
+    forces XLA to re-lay it out before every dot -- measured ~2.3x slower
+    on CPU).
+    """
+    return jnp.transpose(k_pad, (0, 2, 1))[:, cols]
+
+
+def sddmm_spmm_type1_batch(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
+                           cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """Batched fused iteration body: (Q, v_r, N) <- one gather, two einsums.
+
+    Same math per query as `sddmm_spmm_type1`; the explicit q-leading einsum
+    spelling compiles to dot_generals whose batch dims (q, n) are already
+    the gathered tensor's leading dims (measured ~2x faster than the
+    vmap-of-single lowering on CPU, ~4x faster than a (N, nnz, Q, v_r)
+    gather layout).
+
+    k_pad (Q, v_r, V+1), r_sel (Q, v_r), u (Q, v_r, N), cols/vals (N, nnz).
+    """
+    kg = gather_k_batch(k_pad, cols)                 # the ONLY gather
+    w = jnp.einsum("qnki,qin->qnk", kg, u)
+    v = jnp.where(vals[None] != 0.0, vals[None] * safe_recip(w), 0.0)
+    x = jnp.einsum("qnki,qnk->qin", kg, v)
+    return x / r_sel[:, :, None]
+
+
+def sddmm_spmm_type2_batch(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
+                           cols: jax.Array, vals: jax.Array) -> jax.Array:
+    """Batched fused final distance: (Q, N) WMD for all queries at once."""
+    kg = gather_k_batch(k_pad, cols)
+    kmg = gather_k_batch(km_pad, cols)
+    w = jnp.einsum("qnki,qin->qnk", kg, u)
+    v = jnp.where(vals[None] != 0.0, vals[None] * safe_recip(w), 0.0)
+    xm = jnp.einsum("qnki,qnk->qin", kmg, v)
+    return jnp.sum(u * xm, axis=1)                   # (Q, N)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter",))
+def sinkhorn_wmd_sparse_batch(sel_idx: jax.Array, r_sel: jax.Array,
+                              cols: jax.Array, vals: jax.Array,
+                              vecs: jax.Array, lamb: float, max_iter: int,
+                              row_mask: jax.Array | None = None) -> jax.Array:
+    """Multi-query sparse PASWD Sinkhorn-WMD. Returns (Q, N) distances.
+
+    The per-query math is identical to `sinkhorn_wmd_sparse` (fused impl);
+    queries never interact -- the batch axis only amortizes the ELL gather,
+    the dispatch, and the K precompute. Matches the sequential per-query
+    solve to fp32 tolerance.
+    """
+    pre = precompute_batch(sel_idx, r_sel, vecs, lamb, row_mask)
+    k_pad = pad_k(pre.K)
+    km_pad = pad_k(pre.KM)
+    q, v_r = r_sel.shape
+    n = cols.shape[0]
+    x0 = jnp.full((q, v_r, n), 1.0 / v_r, dtype=pre.K.dtype)
+
+    def body(_, x):
+        return sddmm_spmm_type1_batch(k_pad, pre.r, safe_recip(x), cols, vals)
+
+    x = jax.lax.fori_loop(0, max_iter, body, x0)
+    u = safe_recip(x)
+    return sddmm_spmm_type2_batch(k_pad, km_pad, u, cols, vals)

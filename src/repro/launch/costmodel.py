@@ -31,7 +31,6 @@ import dataclasses
 import re
 from typing import Any
 
-import jax
 import numpy as np
 
 # ---------------------------------------------------------------------------

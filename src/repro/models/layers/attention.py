@@ -24,7 +24,6 @@ Softmax is computed in f32.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple, Optional
 
 import jax

@@ -8,7 +8,6 @@ functions for the prefill_32k / decode_32k / long_500k cells.
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

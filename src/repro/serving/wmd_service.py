@@ -1,12 +1,27 @@
 """Batched Sinkhorn-WMD query service (the paper's workload, production-shaped).
 
-Serves "1 query vs N docs" requests against a corpus held sharded on the
-mesh: vocab-striped embeddings + rebucketed ELL (loaded once), queries
-bucketed by padded v_r (exact mask-based padding, core.distributed), solved
-by the fused SDDMM-SpMM engine, one psum per iteration.
+Serves WMD requests against a corpus held sharded on the mesh: vocab-striped
+embeddings + rebucketed ELL (loaded once), solved by the fused SDDMM-SpMM
+engine with one psum per iteration.
 
-This is deliverable (b)'s serving driver: `examples/wmd_query_service.py`
-runs it end-to-end; `launch/serve.py` exposes it via --arch sinkhorn-wmd.
+Service API
+-----------
+  query(r)                  -- one (V,) histogram -> (N,) distances.
+  query_batch(rs)           -- Q histograms -> (Q, N) in ONE device program:
+      queries are padded to the service's v_r bucket (exact mask-based
+      padding, `core.distributed.pad_query_batch`) and admitted in
+      power-of-two Q buckets (bounding retrace count); the batched
+      (Q, v_r, N) engine shares a single ELL gather and a single psum per
+      Sinkhorn iteration across all Q queries (`build_wmd_batch_fn`).
+      Slots added by Q-bucketing carry an all-zero row mask, so they cost
+      flops but contribute nothing and are sliced off before returning.
+  query_batch_sequential(rs) -- the per-query dispatch loop, kept as the
+      correctness oracle and the baseline for bench_query_batch.py.
+  top_k(r, k)               -- nearest-k doc ids + distances.
+
+`examples/wmd_query_service.py` runs it end-to-end; `launch/serve.py`
+exposes it via --arch sinkhorn-wmd (add --batch-queries for the batched
+path).
 """
 from __future__ import annotations
 
@@ -19,7 +34,13 @@ import numpy as np
 
 from repro.configs import sinkhorn_wmd as wmd_cfg
 from repro.core import formats, select_query
-from repro.core.distributed import build_wmd_fn, pad_query, shard_wmd_inputs
+from repro.core.distributed import (build_wmd_batch_fn, build_wmd_fn,
+                                    pad_query, pad_query_batch,
+                                    shard_wmd_inputs)
+
+
+def _next_pow2(q: int) -> int:
+    return 1 << (q - 1).bit_length()
 
 
 @dataclasses.dataclass
@@ -37,6 +58,9 @@ class WMDService:
         self._fn = build_wmd_fn(self.mesh, lamb=self.cfg.lamb,
                                 max_iter=self.cfg.max_iter,
                                 doc_axes=doc_axes)
+        self._batch_fn = build_wmd_batch_fn(self.mesh, lamb=self.cfg.lamb,
+                                            max_iter=self.cfg.max_iter,
+                                            doc_axes=doc_axes)
         self._vecs_d, self._cols_d, self._vals_d = shard_wmd_inputs(
             self.mesh, self.vecs, self._rb.cols, self._rb.vals,
             doc_axes=doc_axes)
@@ -51,8 +75,34 @@ class WMDService:
         return np.asarray(wmd)
 
     def query_batch(self, rs: Sequence[np.ndarray]) -> np.ndarray:
-        """Multiple queries -> (Q, N). Sequential dispatch per query; queries
-        share the resident sharded corpus (the expensive part)."""
+        """Multiple queries -> (Q, N) via the batched (Q, v_r, N) engine.
+
+        One ELL gather and one psum per Sinkhorn iteration serve the whole
+        batch; Q is rounded up to a power of two (retrace bound), with the
+        filler slots masked to contribute exactly zero.
+        """
+        if len(rs) == 0:
+            return np.zeros((0, self.ell.num_docs), np.float32)
+        sels, rsels = zip(*[select_query(r) for r in rs])
+        sel_b, r_b, mask_b = pad_query_batch(sels, rsels, self.cfg.v_r)
+        q = len(rs)
+        q_pad = _next_pow2(q) - q
+        if q_pad:
+            # admission filler: all-pad queries (mask == 0 everywhere) whose
+            # rows are zeroed in K, so they solve to 0 and are discarded.
+            sel_b = np.concatenate(
+                [sel_b, np.zeros((q_pad, self.cfg.v_r), sel_b.dtype)])
+            r_b = np.concatenate(
+                [r_b, np.ones((q_pad, self.cfg.v_r), r_b.dtype)])
+            mask_b = np.concatenate(
+                [mask_b, np.zeros((q_pad, self.cfg.v_r), mask_b.dtype)])
+        wmd = self._batch_fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
+                             jnp.asarray(mask_b), self._vecs_d, self._cols_d,
+                             self._vals_d)
+        return np.asarray(wmd)[:q]
+
+    def query_batch_sequential(self, rs: Sequence[np.ndarray]) -> np.ndarray:
+        """Per-query dispatch loop -- the oracle/baseline for query_batch."""
         return np.stack([self.query(r) for r in rs])
 
     def top_k(self, r: np.ndarray, k: int = 10) -> tuple[np.ndarray,

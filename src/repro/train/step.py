@@ -8,7 +8,6 @@ dry-run lowers exactly this function.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

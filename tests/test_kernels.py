@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs the naive jnp
 oracle (kernels.ref) vs the production jnp path (core.sparse_sinkhorn),
 swept over shapes and dtypes per the assignment."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

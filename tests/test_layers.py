@@ -1,7 +1,6 @@
 """Layer-level unit tests: blockwise attention vs naive, chunkwise mLSTM vs
 recurrent oracle, RG-LRU scan vs step, MoE dispatch + Sinkhorn router, MLA
 naive vs absorbed decode."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ engine, absorbed MLA (covered in test_layers), grouped MoE dispatch."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (bucket_by_length, ell_from_dense, precompute,
                         select_query, sinkhorn_wmd_sparse)

@@ -1,12 +1,15 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core import (cdist_matmul, ell_from_dense, pad_k, precompute,
                         sinkhorn_plan)
 from repro.core import sparse_sinkhorn as ss
 from repro.core.formats import rebucket_for_vocab_shards
+
+pytest.importorskip("hypothesis")  # optional dev dep
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 _settings = settings(max_examples=25, deadline=None)
 
@@ -154,8 +157,7 @@ def test_query_padding_exact(pad_extra, seed):
     # padded query: extra rows with r=1, zeroed K rows via mask -> identical
     sel_p, r_p, mask = pad_query(sel, r_sel, vr + pad_extra)
     from repro.core.distributed import masked_k
-    from repro.core.sparse_sinkhorn import (pad_k as _pad_k,
-                                            sinkhorn_wmd_sparse_pre)
+    from repro.core.sparse_sinkhorn import sinkhorn_wmd_sparse_pre
     from repro.core.sinkhorn import SinkhornPrecompute
     k, km = masked_k(jnp.asarray(vecs[sel_p]), jnp.asarray(vecs), 1.0,
                      jnp.asarray(mask))

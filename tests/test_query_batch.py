@@ -1,0 +1,206 @@
+"""Multi-query batched PASWD engine: batched == sequential oracle across
+mixed-v_r query sets, per-query convergence masking is exact, and pad
+rows/slots contribute exactly zero."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ell_from_dense, precompute_batch, select_query,
+                        sddmm_spmm_type2_batch, pad_k,
+                        sinkhorn_wmd_converged, sinkhorn_wmd_converged_batch,
+                        sinkhorn_wmd_sparse, sinkhorn_wmd_sparse_batch)
+from repro.core.distributed import pad_query_batch
+from repro.core.sparse_sinkhorn import safe_recip
+
+LAMB, ITERS = 1.0, 12
+
+
+@pytest.fixture(scope="module")
+def batch_problem():
+    """Corpus + Q=4 queries with mixed v_r (5, 9, 13, 16 nonzero words)."""
+    rng = np.random.default_rng(7)
+    v, w, n = 256, 24, 48
+    vecs = rng.normal(size=(v, w)).astype(np.float32)
+    c = np.zeros((v, n), np.float32)
+    for j in range(n):
+        widx = rng.choice(v, rng.integers(4, 20), replace=False)
+        c[widx, j] = rng.random(widx.size).astype(np.float32)
+        c[:, j] /= c[:, j].sum()
+    ell = ell_from_dense(c)
+    queries = []
+    for vr in (5, 9, 13, 16):
+        r = np.zeros(v, np.float32)
+        idx = rng.choice(v, vr, replace=False)
+        r[idx] = rng.random(vr).astype(np.float32)
+        r /= r.sum()
+        queries.append(r)
+    sels, rsels = zip(*[select_query(r) for r in queries])
+    return {"vecs": vecs, "ell": ell, "queries": queries,
+            "sels": sels, "rsels": rsels,
+            "cols": jnp.asarray(ell.cols), "vals": jnp.asarray(ell.vals)}
+
+
+def _batched(p, v_r_target, max_iter=ITERS):
+    sel_b, r_b, mask_b = pad_query_batch(p["sels"], p["rsels"], v_r_target)
+    return np.asarray(sinkhorn_wmd_sparse_batch(
+        jnp.asarray(sel_b), jnp.asarray(r_b), p["cols"], p["vals"],
+        p["vecs"], LAMB, max_iter, row_mask=jnp.asarray(mask_b)))
+
+
+def test_batched_matches_sequential_oracle(batch_problem):
+    """(a) batched (Q, v_r, N) engine == per-query solves, mixed v_r."""
+    p = batch_problem
+    batch = _batched(p, v_r_target=16)
+    seq = np.stack([
+        np.asarray(sinkhorn_wmd_sparse(s, r, p["cols"], p["vals"], p["vecs"],
+                                       LAMB, ITERS))
+        for s, r in zip(p["sels"], p["rsels"])])
+    assert batch.shape == seq.shape
+    err = np.abs(batch - seq).max() / np.abs(seq).max()
+    assert err < 1e-4, err
+
+
+def test_convergence_masking_exact(batch_problem):
+    """(b) freezing converged queries never changes their results: each
+    query's (wmd, n_iter) from the masked batch equals its solo solve."""
+    p = batch_problem
+    sel_b, r_b, mask_b = pad_query_batch(p["sels"], p["rsels"], 16)
+    out = sinkhorn_wmd_converged_batch(
+        jnp.asarray(sel_b), jnp.asarray(r_b), p["cols"], p["vals"],
+        p["vecs"], LAMB, 500, tol=1e-5, row_mask=jnp.asarray(mask_b))
+    n_iter = np.asarray(out.n_iter)
+    # queries genuinely converge at different iterations -> masking engaged
+    assert n_iter.min() < n_iter.max()
+    assert n_iter.max() < 500
+    for i, (s, r) in enumerate(zip(p["sels"], p["rsels"])):
+        solo = sinkhorn_wmd_converged(s, r, p["cols"], p["vals"], p["vecs"],
+                                      LAMB, 500, tol=1e-5)
+        assert int(n_iter[i]) == int(solo.n_iter), i
+        rel = (np.abs(np.asarray(out.wmd[i]) - np.asarray(solo.wmd)).max()
+               / np.abs(np.asarray(solo.wmd)).max())
+        assert rel < 1e-4, (i, rel)
+
+
+def test_pad_rows_contribute_exactly_zero(batch_problem):
+    """(c1) the masked K stripes of pad rows are exactly zero, and an
+    all-pad (filler) query solves to exactly zero WMD."""
+    p = batch_problem
+    sel_b, r_b, mask_b = pad_query_batch(p["sels"], p["rsels"], 16)
+    pre = precompute_batch(jnp.asarray(sel_b), jnp.asarray(r_b),
+                           jnp.asarray(p["vecs"]), LAMB,
+                           row_mask=jnp.asarray(mask_b))
+    k = np.asarray(pre.K)
+    km = np.asarray(pre.KM)
+    for i in range(len(p["sels"])):
+        vr = p["sels"][i].shape[0]
+        np.testing.assert_array_equal(k[i, vr:], 0.0)
+        np.testing.assert_array_equal(km[i, vr:], 0.0)
+    # all-pad query (the service's Q-bucket filler): WMD exactly 0
+    q1 = jnp.zeros((1, 16), jnp.int32)
+    wmd = sinkhorn_wmd_sparse_batch(
+        q1, jnp.ones((1, 16), jnp.float32), p["cols"], p["vals"], p["vecs"],
+        LAMB, ITERS, row_mask=jnp.zeros((1, 16), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(wmd), 0.0)
+
+
+def test_pad_slots_and_rows_inert_in_contractions(batch_problem):
+    """(c2) ELL pad slots (col == V) read the appended zero K column, so
+    flipping a pad slot's column id changes nothing; and distances are
+    invariant (to fp tolerance) to the amount of row padding."""
+    p = batch_problem
+    sel_b, r_b, mask_b = pad_query_batch(p["sels"], p["rsels"], 16)
+    pre = precompute_batch(jnp.asarray(sel_b), jnp.asarray(r_b),
+                          jnp.asarray(p["vecs"]), LAMB,
+                          row_mask=jnp.asarray(mask_b))
+    k_pad, km_pad = pad_k(pre.K), pad_k(pre.KM)
+    q, v_r = r_b.shape
+    n = p["cols"].shape[0]
+    u = safe_recip(jnp.full((q, v_r, n), 1.0 / v_r, jnp.float32))
+    wmd_a = np.asarray(sddmm_spmm_type2_batch(k_pad, km_pad, u,
+                                              p["cols"], p["vals"]))
+    # retarget every pad slot (val == 0) from pad id V to word 0: must be
+    # bit-identical because the `vals != 0` mask gates those slots.
+    cols_mut = jnp.where(p["vals"] == 0.0, 0, p["cols"])
+    wmd_b = np.asarray(sddmm_spmm_type2_batch(k_pad, km_pad, u,
+                                              cols_mut, p["vals"]))
+    np.testing.assert_array_equal(wmd_a, wmd_b)
+    # row-padding invariance: v_r bucket 16 vs 32 (pad rows only add zeros)
+    d16 = _batched(p, v_r_target=16)
+    d32 = _batched(p, v_r_target=32)
+    np.testing.assert_allclose(d16, d32, rtol=2e-5)
+
+
+def test_distributed_batch_fn_matches_single_chip():
+    """build_wmd_batch_fn on a (2, 2) mesh == per-query single-chip solves
+    (subprocess: needs a forced device count)."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import (select_query, sinkhorn_wmd_sparse, ell_from_dense,
+                        rebucket_for_vocab_shards)
+from repro.core.distributed import (build_wmd_batch_fn, pad_query_batch,
+                                    shard_wmd_inputs)
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh((2, 2), ("data", "model"))
+rng = np.random.default_rng(3)
+V, w, N = 256, 32, 64
+vecs = rng.normal(size=(V, w)).astype(np.float32)
+c = np.zeros((V, N), np.float32)
+for j in range(N):
+    widx = rng.choice(V, rng.integers(3, 17), replace=False)
+    c[widx, j] = rng.random(widx.size).astype(np.float32)
+    c[:, j] /= c[:, j].sum()
+ell = ell_from_dense(c)
+queries = []
+for vrn in (5, 9, 14):
+    r = np.zeros(V, np.float32)
+    idx = rng.choice(V, vrn, replace=False)
+    r[idx] = rng.random(vrn).astype(np.float32); r /= r.sum()
+    queries.append(r)
+sels, rsels = zip(*[select_query(r) for r in queries])
+ref = np.stack([np.asarray(sinkhorn_wmd_sparse(
+    s, r, jnp.asarray(ell.cols), jnp.asarray(ell.vals), vecs, 1.0, 12))
+    for s, r in zip(sels, rsels)])
+sel_b, r_b, mask_b = pad_query_batch(sels, rsels, 16)
+rb = rebucket_for_vocab_shards(ell, 2)
+fn = build_wmd_batch_fn(mesh, lamb=1.0, max_iter=12)
+vd, cd, vld = shard_wmd_inputs(mesh, vecs, rb.cols, rb.vals)
+got = np.asarray(fn(jnp.asarray(vecs[sel_b]), jnp.asarray(r_b),
+                    jnp.asarray(mask_b), vd, cd, vld))
+err = np.abs(got - ref).max() / np.abs(ref).max()
+assert got.shape == ref.shape, (got.shape, ref.shape)
+assert err < 1e-4, err
+print("DIST_BATCH_OK", err)
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(repo, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    assert "DIST_BATCH_OK" in out.stdout
+
+
+def test_service_query_batch_matches_sequential():
+    """WMDService.query_batch == the sequential per-query loop (single
+    device), including non-power-of-two Q admission."""
+    from repro.configs import sinkhorn_wmd as wmd_cfg
+    from repro.data import make_corpus
+    from repro.launch.mesh import make_mesh
+    from repro.serving import WMDService
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = wmd_cfg.smoke_config()
+    data = make_corpus(vocab_size=cfg.vocab_size, embed_dim=cfg.embed_dim,
+                       num_docs=cfg.num_docs, num_queries=3,
+                       query_words=cfg.v_r - 2, seed=1)
+    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
+    batch = svc.query_batch(data.queries)        # Q=3 -> padded to 4
+    seq = svc.query_batch_sequential(data.queries)
+    assert batch.shape == (3, cfg.num_docs)
+    err = np.abs(batch - seq).max() / np.abs(seq).max()
+    assert err < 1e-4, err
+    assert svc.query_batch([]).shape == (0, cfg.num_docs)

@@ -5,9 +5,12 @@ halves == one pass)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.models.layers.xlstm import mlstm_chunkwise, mlstm_recurrent
+
+pytest.importorskip("hypothesis")  # optional dev dep
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 _settings = settings(max_examples=15, deadline=None)
 

@@ -6,7 +6,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.models.layers import attention
@@ -56,9 +55,8 @@ def test_cache_shardings_divisibility_safe():
     from repro.distributed import partitioning
     from repro.models import build_model
     # abstract mesh: spec-only validation without needing 8 real devices
-    mesh = jax.sharding.AbstractMesh(
-        (2, 4), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.compat import abstract_mesh
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     for arch in arch_ids():
         cfg = get_config(arch)
         model = build_model(cfg)

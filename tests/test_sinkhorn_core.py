@@ -2,7 +2,6 @@
 convergence behavior, and the paper's f32-transcendental error envelope."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (ell_from_dense, select_query, sinkhorn_wmd_converged,
                         sinkhorn_wmd_dense, sinkhorn_wmd_sparse)

@@ -4,11 +4,9 @@ the serving loop."""
 import os
 import subprocess
 import sys
-import tempfile
 
 import jax
 import numpy as np
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
