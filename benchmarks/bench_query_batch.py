@@ -1,24 +1,38 @@
 """Multi-query batching throughput: batched (Q, v_r, N) engine vs the
-sequential per-query dispatch loop.
+sequential per-query dispatch loop, with a ``--docs-chunk`` cache-blocking
+sweep and an ``--impl`` (fused | kernel) mode.
 
     PYTHONPATH=src python benchmarks/bench_query_batch.py [--tiny] \
-        [--out BENCH_query_batch.json]
+        [--docs-chunk 0 64 128 256] [--impl fused] [--out BENCH_query_batch.json]
 
 For each Q the sequential baseline replays `WMDService.query` Q times
 (re-gathering K, re-running precompute, and paying one program dispatch per
-query); the batched path runs ONE device program with a single batched ELL
-gather per iteration. Emits ``name,us_per_call,derived`` CSV rows (the
+query); the batched path runs ONE device program. ``--docs-chunk`` sweeps
+`WMDService(docs_chunk=...)` (0 = unchunked): the chunk loop sits OUTSIDE
+the Sinkhorn loop (docs are independent OT problems), so each chunk's
+(Q, v_r, docs_chunk) iterate stays cache-resident across all iterations --
+see core.sparse_sinkhorn "Batched engine & cache blocking". All variants are
+timed INTERLEAVED (round-robin, median of rounds) so slow-box drift hits
+every variant equally. Emits ``name,us_per_call,derived`` CSV rows (the
 harness idiom) and writes a JSON artifact for the perf trajectory
-(`BENCH_*.json`, uploaded by the nightly CI smoke job).
+(`BENCH_*.json`, uploaded by the nightly CI smoke job) recording the full
+chunk sweep and the chosen chunk per Q.
 
-Default shape is the low-latency serving regime (small per-query corpus
-slice, short queries): there, per-query dispatch + precompute rivals solve
-compute and batching amortizes both, giving the >= 2x throughput target at
-Q = 16 on CPU. At bulk shapes (--docs/--vocab up) the solve is
-gather-bandwidth-bound and K differs per query, so CPU batching converges
-toward parity -- the win at those shapes is the collective amortization on
-real meshes (one psum per iteration regardless of Q), which this single-host
-bench cannot show.
+Measured regimes on the 2-core CPU CI box (vocab 2k, nnz ~96, v_r 16):
+  * low-latency (N = 128): batched >= 2.5x sequential qps -- per-query
+    dispatch + precompute rival solve compute and batching amortizes both.
+  * bulk (N >= 1024, Q = 16): the unchunked batched path loses to sequential
+    (~0.6x, the (Q, v_r, N)-working-set cache blow); doc-chunking wins it
+    back (1.5-1.9x over unchunked), recovering parity-to-1.4x vs sequential.
+    The remaining gap to bigger wins is structural: at bulk the per-query
+    program overhead batching amortizes is only ~10-15% of a solve, and the
+    iteration math itself runs at the same roofline either way -- the bulk
+    win of the batched engine is collective amortization on real meshes
+    (one psum per iteration regardless of Q), which a single-host bench
+    cannot show.
+  * Q = 1 is routed to the sequential path by the service admission policy
+    (speedup 0.96x batched in the PR-1 artifact; the `admission` field
+    records the route).
 
 Self-contained on purpose (no benchmarks.common import): CI invokes it as a
 script with only the installed `repro` package on the path.
@@ -30,24 +44,23 @@ import json
 import time
 
 
-def bench(svc, queries, *, warmup: int = 1, repeat: int = 3):
-    """Median wall seconds of sequential vs batched dispatch of ``queries``."""
-    def run(fn):
+def bench_interleaved(calls: dict, *, warmup: int = 1, rounds: int = 5):
+    """Median wall seconds per call, measured round-robin across variants."""
+    for fn in calls.values():
         for _ in range(warmup):
-            fn(queries)
-        ts = []
-        for _ in range(repeat):
+            fn()
+    times = {name: [] for name in calls}
+    for _ in range(rounds):
+        for name, fn in calls.items():
             t0 = time.perf_counter()
-            fn(queries)
-            ts.append(time.perf_counter() - t0)
-        ts.sort()
-        return ts[len(ts) // 2]
-
-    return run(svc.query_batch_sequential), run(svc.query_batch)
+            fn()
+            times[name].append(time.perf_counter() - t0)
+    return {name: sorted(ts)[len(ts) // 2] for name, ts in times.items()}
 
 
 def run(*, vocab: int = 1024, docs: int = 128, qs=(1, 4, 16, 64),
         mean_words: float = 8.0, query_words: int = 13, v_r: int = 16,
+        docs_chunks=(0,), impl: str = "fused", rounds: int = 5,
         out: str | None = None) -> dict:
     import numpy as np
     from repro.configs.sinkhorn_wmd import WMDConfig
@@ -62,27 +75,80 @@ def run(*, vocab: int = 1024, docs: int = 128, qs=(1, 4, 16, 64),
                        query_words=query_words, mean_words=mean_words,
                        seed=0)
     mesh = make_mesh((1, 1), ("data", "model"))
-    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
+    docs_chunks = tuple(dict.fromkeys(docs_chunks))  # dedup, keep order
+    if 0 not in docs_chunks:
+        docs_chunks = (0,) + docs_chunks
+    # ONE service (one device-sharded corpus); the chunk sweep rides the
+    # per-(impl, docs_chunk) batch-fn cache via query_batch(docs_chunk=...)
+    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
+                     impl=impl)
 
     results = {"vocab": vocab, "docs": docs, "v_r": cfg.v_r,
                "nnz_max": data.ell.nnz_max, "max_iter": cfg.max_iter,
-               "points": []}
+               "impl": impl, "docs_chunks": list(docs_chunks), "points": [],
+               "note": ("chunk_times_s sweeps WMDService(docs_chunk=...); "
+                        "chosen_chunk minimizes batched time. At bulk N the "
+                        "chunked path wins ~1.5-1.8x over unchunked "
+                        "(cache-resident per-chunk solve) and reaches "
+                        "parity-to-1.4x vs the sequential per-query loop; "
+                        "bigger bulk wins need a real mesh (see module "
+                        "docstring). Low-latency N (~128) shows >= 2.5x "
+                        "vs sequential.")}
     for q in qs:
         queries = data.queries[:q]
+        if q == 1 and impl == "fused":
+            # the service admission policy routes fused singletons to the
+            # sequential path (0.96x batched in the PR-1 artifact) -- every
+            # "batched" variant IS the sequential program, so a chunk sweep
+            # would chart pure timing noise. Record the policy instead.
+            # (A non-fused impl bypasses the shortcut, so Q=1 falls through
+            # to the real batched measurement below.)
+            med = bench_interleaved(
+                {"seq": lambda: svc.query_batch_sequential(queries)},
+                rounds=rounds)
+            t_seq = med["seq"]
+            # only genuinely measured fields: no t_batched_s / speedup /
+            # max_abs_err, so trajectory consumers can't mistake the policy
+            # route for a batched measurement
+            point = {"Q": 1, "t_seq_s": t_seq, "qps_seq": 1 / t_seq,
+                     "admission": "sequential"}
+            results["points"].append(point)
+            print(f"qbatch/Q1,{t_seq * 1e6:.1f},"
+                  f"qps={1 / t_seq:.1f}:admission=sequential")
+            continue
         # correctness gate before timing: batched must match the oracle
-        err = float(np.abs(svc.query_batch(queries)
-                           - svc.query_batch_sequential(queries)).max())
-        t_seq, t_bat = bench(svc, queries)
+        # (for every swept chunk size)
+        seq_ref = svc.query_batch_sequential(queries)
+        err = max(float(np.abs(svc.query_batch(queries, docs_chunk=dc)
+                               - seq_ref).max())
+                  for dc in docs_chunks)
+        calls = {"seq": lambda: svc.query_batch_sequential(queries)}
+        for dc in docs_chunks:
+            calls[f"dc{dc}"] = (lambda d: (
+                lambda: svc.query_batch(queries, docs_chunk=d)))(dc)
+        med = bench_interleaved(calls, rounds=rounds)
+        t_seq = med["seq"]
+        chunk_times = {str(dc): med[f"dc{dc}"] for dc in docs_chunks}
+        chosen = min(docs_chunks, key=lambda dc: med[f"dc{dc}"])
+        t_bat = med[f"dc{chosen}"]
+        t_un = med["dc0"]
         qps_seq, qps_bat = q / t_seq, q / t_bat
-        speedup = t_seq / t_bat
+        point = {
+            "Q": q, "t_seq_s": t_seq, "t_batched_s": t_bat,
+            "t_unchunked_s": t_un, "chunk_times_s": chunk_times,
+            "chosen_chunk": chosen,
+            "qps_seq": qps_seq, "qps_batched": qps_bat,
+            "speedup": t_seq / t_bat,
+            "speedup_chunked_vs_unchunked": t_un / t_bat,
+            "max_abs_err": err,
+            "admission": "batched",
+        }
+        results["points"].append(point)
         print(f"qbatch/Q{q},{t_bat / q * 1e6:.1f},"
               f"qps_batched={qps_bat:.1f}:qps_seq={qps_seq:.1f}:"
-              f"speedup={speedup:.2f}x")
-        results["points"].append({
-            "Q": q, "t_seq_s": t_seq, "t_batched_s": t_bat,
-            "qps_seq": qps_seq, "qps_batched": qps_bat,
-            "speedup": speedup, "max_abs_err": err,
-        })
+              f"speedup={point['speedup']:.2f}x:"
+              f"chunk={chosen}:chunk_vs_unchunked="
+              f"{point['speedup_chunked_vs_unchunked']:.2f}x")
     if out:
         with open(out, "w") as f:
             json.dump(results, f, indent=2)
@@ -98,16 +164,24 @@ def main():
     ap.add_argument("--query-words", type=int, default=13)
     ap.add_argument("--v-r", type=int, default=16)
     ap.add_argument("--qs", type=int, nargs="+", default=[1, 4, 16, 64])
+    ap.add_argument("--docs-chunk", type=int, nargs="+", default=[0],
+                    help="docs_chunk sweep; 0 = unchunked (always included)")
+    ap.add_argument("--impl", default="fused", choices=("fused", "kernel"),
+                    help="batched contraction path (kernel = Pallas, "
+                         "interpret mode on CPU: slow, correctness timing)")
+    ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke shape (small corpus, Q <= 8)")
     ap.add_argument("--out", default="BENCH_query_batch.json")
     args = ap.parse_args()
     if args.tiny:
-        run(vocab=512, docs=64, qs=(1, 4, 8), out=args.out)
+        run(vocab=512, docs=64, qs=(1, 4, 8), docs_chunks=(0, 16, 32),
+            rounds=3, out=args.out)
     else:
         run(vocab=args.vocab, docs=args.docs, qs=tuple(args.qs),
             mean_words=args.mean_words, query_words=args.query_words,
-            v_r=args.v_r, out=args.out)
+            v_r=args.v_r, docs_chunks=tuple(args.docs_chunk),
+            impl=args.impl, rounds=args.rounds, out=args.out)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,9 @@ def main():
     ap.add_argument("--batch-queries", action="store_true",
                     help="solve all queries in one batched (Q, v_r, N) "
                          "program and report throughput vs the loop")
+    ap.add_argument("--docs-chunk", type=int, default=0,
+                    help="cache-block the batched solve over doc chunks "
+                         "of this size (0 = unchunked)")
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -45,7 +48,8 @@ def main():
                        num_docs=cfg.num_docs, num_queries=args.queries,
                        query_words=19, seed=0)
     t0 = time.perf_counter()
-    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
+    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
+                     docs_chunk=args.docs_chunk or None)
     print(f"corpus loaded+sharded in {time.perf_counter() - t0:.2f}s "
           f"(nnz={data.nnz})")
 

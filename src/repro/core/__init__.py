@@ -16,8 +16,10 @@ from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
                                 rebucket_for_vocab_shards)
 from repro.core.sinkhorn import (SinkhornPrecompute, precompute, select_query,
                                  sinkhorn_wmd_dense)
-from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute, pad_k,
+from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute,
+                                        batched_sinkhorn_loop, pad_k,
                                         precompute_batch, sddmm, spmm,
+                                        sddmm_batch, spmm_batch,
                                         sddmm_spmm_type1, sddmm_spmm_type2,
                                         sddmm_spmm_type1_batch,
                                         sddmm_spmm_type2_batch,
@@ -37,6 +39,7 @@ __all__ = [
     "pad_k", "sddmm", "spmm", "sddmm_spmm_type1", "sddmm_spmm_type2",
     "sinkhorn_wmd_sparse",
     "BatchedSinkhornPrecompute", "precompute_batch",
+    "batched_sinkhorn_loop", "sddmm_batch", "spmm_batch",
     "sddmm_spmm_type1_batch", "sddmm_spmm_type2_batch",
     "sinkhorn_wmd_sparse_batch",
     "SinkhornResult", "sinkhorn_divergence", "sinkhorn_plan",

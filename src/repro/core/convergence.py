@@ -15,10 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sinkhorn import precompute
-from repro.core.sparse_sinkhorn import (pad_k, precompute_batch, safe_recip,
-                                        sddmm_spmm_type1, sddmm_spmm_type2,
-                                        sddmm_spmm_type1_batch,
-                                        sddmm_spmm_type2_batch)
+from repro.core.sparse_sinkhorn import (_final_batch, _iteration_batch,
+                                        batched_sinkhorn_loop, pad_k,
+                                        precompute_batch, safe_recip,
+                                        sddmm_spmm_type1, sddmm_spmm_type2)
 
 
 class ConvergedWMD(NamedTuple):
@@ -64,12 +64,15 @@ class BatchConvergedWMD(NamedTuple):
     delta: jax.Array   # (Q,) final per-query relative |dx|_inf
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter",))
+@functools.partial(jax.jit,
+                   static_argnames=("max_iter", "impl", "docs_chunk"))
 def sinkhorn_wmd_converged_batch(sel_idx: jax.Array, r_sel: jax.Array,
                                  cols: jax.Array, vals: jax.Array,
                                  vecs: jax.Array, lamb: float, max_iter: int,
                                  tol: float = 1e-6,
-                                 row_mask: jax.Array | None = None
+                                 row_mask: jax.Array | None = None,
+                                 impl: str = "fused",
+                                 docs_chunk: int | None = None
                                  ) -> BatchConvergedWMD:
     """Batched early-exit solve with **per-query convergence masking**.
 
@@ -79,9 +82,17 @@ def sinkhorn_wmd_converged_batch(sel_idx: jax.Array, r_sel: jax.Array,
     mask) while stragglers keep iterating. Freezing is exact -- a frozen
     query's trajectory is bit-identical to one that stopped at its own
     convergence point, because queries never interact. The loop exits when
-    every query has converged or at ``max_iter``.
+    every query has converged or at ``max_iter``. (The loop core is
+    `sparse_sinkhorn.batched_sinkhorn_loop`, shared with the fixed-budget
+    solver and the distributed shard_map engine.)
 
     sel_idx/r_sel/row_mask are (Q, v_r) bucketed queries (see pad_query).
+    impl selects the contraction path (same table as
+    `sinkhorn_wmd_sparse_batch`). docs_chunk here is PER-OP (inside each
+    iteration-major step, bitwise exact) -- unlike the per-solve chunk
+    hoisting of `sinkhorn_wmd_sparse_batch` -- because the global per-query
+    freeze masks and the reported n_iter/delta are defined over the full
+    doc axis.
     """
     pre = precompute_batch(sel_idx, r_sel, vecs, lamb, row_mask)
     k_pad = pad_k(pre.K)
@@ -90,24 +101,12 @@ def sinkhorn_wmd_converged_batch(sel_idx: jax.Array, r_sel: jax.Array,
     n = cols.shape[0]
     x0 = jnp.full((q, v_r, n), 1.0 / v_r, dtype=pre.K.dtype)
 
-    def cond(carry):
-        _, delta, _, it = carry
-        return (it < max_iter) & jnp.any(delta >= tol)
+    def iteration(x):
+        return _iteration_batch(impl, k_pad, pre.r, x, cols, vals,
+                                docs_chunk)
 
-    def body(carry):
-        x, delta, n_iter, it = carry
-        active = delta >= tol                              # (Q,)
-        x_new = sddmm_spmm_type1_batch(k_pad, pre.r, safe_recip(x),
-                                       cols, vals)
-        rel = jnp.max(jnp.abs(x_new - x) / (jnp.abs(x) + 1e-30),
-                      axis=(1, 2))                         # per-query delta
-        x = jnp.where(active[:, None, None], x_new, x)     # freeze converged
-        delta = jnp.where(active, rel, delta)
-        n_iter = n_iter + active.astype(n_iter.dtype)
-        return x, delta, n_iter, it + 1
-
-    x, delta, n_iter, _ = jax.lax.while_loop(
-        cond, body, (x0, jnp.full((q,), jnp.inf, x0.dtype),
-                     jnp.zeros((q,), jnp.int32), jnp.asarray(0)))
-    wmd = sddmm_spmm_type2_batch(k_pad, km_pad, safe_recip(x), cols, vals)
+    x, delta, n_iter = batched_sinkhorn_loop(iteration, x0,
+                                             max_iter=max_iter, tol=tol)
+    wmd = _final_batch(impl, k_pad, km_pad, safe_recip(x), cols, vals,
+                       docs_chunk)
     return BatchConvergedWMD(wmd=wmd, n_iter=n_iter, delta=delta)

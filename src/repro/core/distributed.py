@@ -170,7 +170,10 @@ def build_wmd_fn(mesh: Mesh, *, lamb: float, max_iter: int,
 
 def build_wmd_batch_fn(mesh: Mesh, *, lamb: float, max_iter: int,
                        doc_axes: Sequence[str] = ("data",),
-                       model_axis: str = "model"):
+                       model_axis: str = "model", impl: str = "fused",
+                       docs_chunk: int | None = None,
+                       chunk_placement: str = "solve", tol: float = 0.0,
+                       with_info: bool = False):
     """Build the jit'd multi-query batched WMD solver for ``mesh``.
 
     The (Q, v_r, N) analogue of `build_wmd_fn`: per iteration, every device
@@ -180,6 +183,32 @@ def build_wmd_batch_fn(mesh: Mesh, *, lamb: float, max_iter: int,
     independent of Q, so batching amortizes both the gather and the
     communication latency.
 
+    impl selects the contraction path ("fused" | "unfused" | "kernel", the
+    same table as the single-chip solvers). docs_chunk cache-blocks each
+    device's local doc slice, with ``chunk_placement`` choosing where the
+    chunk loop sits (see sparse_sinkhorn "Batched engine & cache blocking"):
+      * "solve" (default) -- chunk loop OUTSIDE the Sinkhorn loop: each
+        chunk runs all its iterations cache-resident. Fastest on CPU /
+        small meshes, but the psum count becomes iterations x chunks, and
+        tol freezes each (query, chunk) block at its own convergence (the
+        reported n_iter/delta are per-query maxima over chunks).
+      * "iteration" -- per-op chunking inside the iteration-major loop:
+        keeps ONE psum per iteration (the multi-chip contract) and global
+        per-query freeze semantics exactly matching
+        `core.convergence.sinkhorn_wmd_converged_batch`.
+
+    Early exit (tol > 0): the loop is `ss.batched_sinkhorn_loop` with an
+    **all-shards convergence vote** -- each device reduces its local doc
+    slice to a per-query delta, and a pmax all-reduce over (model, *doc_axes)
+    makes the vote unanimous. The pmax of per-shard inf-norms IS the global
+    inf-norm, so per-query freeze/n_iter decisions match the single-host
+    `sinkhorn_wmd_converged_batch` exactly (equivalently one could psum
+    per-shard "still active" votes; the pmax also reproduces the reported
+    delta). Converged queries stop contributing writes on every shard; the
+    loop (and with it all collectives) exits when every query has converged
+    or at ``max_iter``. With tol = 0.0 the loop runs the fixed budget and no
+    vote collective is issued.
+
     The returned fn takes (vecs_sel, r_sel, row_mask, vecs, cols_b, vals_b):
       vecs_sel (Q, v_r, w)           replicated -- bucketed query embeddings
       r_sel    (Q, v_r)              replicated    (pad rows = 1.0)
@@ -187,16 +216,23 @@ def build_wmd_batch_fn(mesh: Mesh, *, lamb: float, max_iter: int,
       vecs     (V, w)                P(model)
       cols_b   (S_model, N, nnz_loc) P(model, doc_axes)
       vals_b   (S_model, N, nnz_loc) P(model, doc_axes)
-    and returns wmd (Q, N) with the doc axis sharded over doc_axes.
+    and returns wmd (Q, N) with the doc axis sharded over doc_axes -- or,
+    with with_info=True, (wmd, n_iter (Q,), delta (Q,)) where the trailing
+    two are replicated (the vote makes them identical on every device).
 
     Retracing happens per distinct Q; callers bound it by bucketing Q
     (see serving.wmd_service admission).
     """
+    if chunk_placement not in ("solve", "iteration"):
+        raise ValueError(f"chunk_placement must be 'solve' or 'iteration', "
+                         f"got {chunk_placement!r}")
     in_specs = (P(None, None, None), P(None, None), P(None, None),
                 P(model_axis, None),
                 P(model_axis, *[tuple(doc_axes)], None),
                 P(model_axis, *[tuple(doc_axes)], None))
-    out_specs = P(None, tuple(doc_axes))
+    wmd_spec = P(None, tuple(doc_axes))
+    out_specs = (wmd_spec, P(None), P(None)) if with_info else wmd_spec
+    vote_axes = (model_axis, *doc_axes)
 
     def per_device(vecs_sel, r_sel, row_mask, vecs_loc, cols_b, vals_b):
         cols_loc = cols_b[0]
@@ -204,22 +240,50 @@ def build_wmd_batch_fn(mesh: Mesh, *, lamb: float, max_iter: int,
         k, km = masked_k_batch(vecs_sel, vecs_loc, lamb, row_mask)
         k_pad, km_pad = pad_k(k), pad_k(km)
         q, v_r = r_sel.shape
-        n_loc = cols_loc.shape[0]
         ones_r = jnp.ones_like(r_sel)
+        type1 = ss._resolve_impl("type1", impl, True)
+        type2 = ss._resolve_impl("type2", impl, True)
+        iter_chunk = docs_chunk if chunk_placement == "iteration" else None
 
-        def body(_, x):
+        def solve_chunk(x0_c, cols_c, vals_c):
+            def iteration(x):
+                u = safe_recip(x)
+                x_part = type1(k_pad, ones_r, u, cols_c, vals_c,
+                               docs_chunk=iter_chunk)
+                x_full = jax.lax.psum(x_part, model_axis)  # THE collective
+                return x_full / r_sel[:, :, None]
+
+            if tol:
+                x, delta, n_iter = ss.batched_sinkhorn_loop(
+                    iteration, x0_c, max_iter=max_iter, tol=tol,
+                    delta_all_reduce=lambda d: jax.lax.pmax(d, vote_axes))
+            else:
+                x = jax.lax.fori_loop(0, max_iter,
+                                      lambda _, xx: iteration(xx), x0_c)
+                delta = jnp.zeros((q,), x0_c.dtype)
+                n_iter = jnp.full((q,), max_iter, jnp.int32)
             u = safe_recip(x)
-            x_part = ss.sddmm_spmm_type1_batch(k_pad, ones_r, u,
-                                               cols_loc, vals_loc)
-            x_full = jax.lax.psum(x_part, model_axis)  # THE collective
-            return x_full / r_sel[:, :, None]
+            wmd_part = type2(k_pad, km_pad, u, cols_c, vals_c,
+                             docs_chunk=iter_chunk)
+            return jax.lax.psum(wmd_part, model_axis), n_iter, delta
 
+        n_loc = cols_loc.shape[0]
         x0 = jnp.full((q, v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
-        x = jax.lax.fori_loop(0, max_iter, body, x0)
-        u = safe_recip(x)
-        wmd_part = ss.sddmm_spmm_type2_batch(k_pad, km_pad, u,
-                                             cols_loc, vals_loc)
-        return jax.lax.psum(wmd_part, model_axis)
+        if chunk_placement == "solve" and docs_chunk and docs_chunk < n_loc:
+            # unrolled chunk loop (trailing chunk may be smaller -- python
+            # slicing keeps shapes static per chunk, no doc padding needed)
+            parts = [solve_chunk(x0[:, :, s:s + docs_chunk],
+                                 cols_loc[s:s + docs_chunk],
+                                 vals_loc[s:s + docs_chunk])
+                     for s in range(0, n_loc, docs_chunk)]
+            wmd = jnp.concatenate([p[0] for p in parts], axis=-1)
+            n_iter = jnp.max(jnp.stack([p[1] for p in parts]), axis=0)
+            delta = jnp.max(jnp.stack([p[2] for p in parts]), axis=0)
+        else:
+            wmd, n_iter, delta = solve_chunk(x0, cols_loc, vals_loc)
+        if with_info:
+            return wmd, n_iter, delta
+        return wmd
 
     fn = shard_map(per_device, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, check_vma=False)

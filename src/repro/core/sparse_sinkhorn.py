@@ -14,7 +14,8 @@ type2 (final distance) swaps the SpMM operand to K.*M and reduces in-kernel:
 
     WMD[j] = sum_i u[i,j] * sum_k (K.*M)[i, cols[j,k]] * v[j,k]
 
-Three execution paths, selected by ``impl``:
+Three execution paths, selected by ``impl`` (one table, shared by the
+single-query and the batched solver -- see `_resolve_impl`):
   * "fused"    -- single gather per iteration (jnp). Production jnp path and
                   oracle for the Pallas kernel.
   * "unfused"  -- separate SDDMM / SpMM with independent gathers, mirroring
@@ -23,6 +24,45 @@ Three execution paths, selected by ``impl``:
 
 All paths consume K padded with one trailing zero column so ELL pad slots
 (col == V) contribute exactly zero.
+
+Batched engine & cache blocking
+-------------------------------
+The batched iteration's nominal working set is the gathered tensor
+``(Q, N, nnz_max, v_r) * 4B`` -- at a bulk shape (Q=16, N=1024, nnz=64,
+v_r=16) that is 64 MB, far past CPU LLC (and any VMEM budget), which is
+where `bench_query_batch.py` showed batched throughput collapsing to
+sequential parity. ``docs_chunk`` cache-blocks the engine at two levels:
+
+  * per-op (``sddmm_spmm_type{1,2}_batch(docs_chunk=...)``): the SAME fused
+    math over static N-chunks, live gather ``(Q, docs_chunk, nnz, v_r)``.
+    Bitwise exact -- every output element's FP op sequence is unchanged
+    because both contractions reduce within a single doc (over v_r resp.
+    nnz), never across docs. Used inside iteration-major loops that must
+    keep ONE collective per iteration (`core.distributed`) or global
+    per-query convergence state (`core.convergence`).
+  * per-solve (`sinkhorn_wmd_sparse_batch(docs_chunk=...)`): docs are
+    *independent* OT problems, so the chunk loop hoists OUTSIDE the whole
+    Sinkhorn loop -- each chunk runs all of its iterations while its
+    ``(Q, v_r, docs_chunk)`` iterate (and the chunk's ELL slice) stays
+    cache-resident across iterations, instead of sweeping the full
+    ``(Q, v_r, N)`` state every iteration. Measured 1.5-3.3x over the
+    iteration-major unchunked loop at bulk shapes (N >= 1024, Q = 16) on a
+    2-core CPU; identical results.
+
+Non-dividing N is handled by padding docs with ELL pad slots (col = V ->
+the zero K column, val = 0), whose outputs are sliced off. The chunk loop
+is unrolled in-trace (preserving XLA's gather-into-contraction fusion; a
+lax.scan fallback bounds HLO size past MAX_UNROLLED_CHUNKS). The Pallas
+analogue is the ``docs_blk`` / ``q_blk`` grid tiling in
+`kernels.sddmm_spmm` ("Batched kernel & cache blocking" there).
+
+Early exit: `batched_sinkhorn_loop` is the shared while-loop core -- per
+query, iteration stops contributing writes once its relative iterate delta
+drops below ``tol`` (freeze masks), and the loop exits when all queries
+converge or ``max_iter`` hits. With ``tol = 0.0`` no query ever freezes
+(``delta >= 0`` always holds), so results equal the fixed-``max_iter``
+loop exactly; the solvers skip the loop's bookkeeping entirely in that
+case and run a plain fori_loop.
 """
 from __future__ import annotations
 
@@ -102,29 +142,88 @@ def sddmm_spmm_type2(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
     return jnp.sum(u * xm, axis=0)                   # (N,)
 
 
-def _iteration(impl: str, pre_kpad: jax.Array, r_sel: jax.Array,
-               x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
-    u = safe_recip(x)
-    if impl == "fused":
-        return sddmm_spmm_type1(pre_kpad, r_sel, u, cols, vals)
-    if impl == "unfused":
-        # independent gathers, with a barrier so XLA cannot CSE them back
-        # into the fused form (keeps the Fig. 9 baseline honest).
-        v = sddmm(pre_kpad, u, cols, vals)
-        v = jax.lax.optimization_barrier(v)
-        return spmm(pre_kpad / r_sel[:, None], v, cols)
+def _type1_unfused(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
+                   cols: jax.Array, vals: jax.Array) -> jax.Array:
+    # independent gathers, with a barrier so XLA cannot CSE them back
+    # into the fused form (keeps the Fig. 9 baseline honest).
+    v = sddmm(k_pad, u, cols, vals)
+    v = jax.lax.optimization_barrier(v)
+    return spmm(k_pad / r_sel[:, None], v, cols)
+
+
+def _type1_unfused_batch(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
+                         cols: jax.Array, vals: jax.Array) -> jax.Array:
+    v = sddmm_batch(k_pad, u, cols, vals)
+    v = jax.lax.optimization_barrier(v)
+    return spmm_batch(k_pad / r_sel[..., None], v, cols)
+
+
+def _resolve_impl(kind: str, impl: str, batched: bool):
+    """The ONE impl dispatch table, shared by the single-query and batched
+    solvers (and `core.distributed`). kind: "type1" (iteration contraction,
+    signature (k_pad, r_sel, u, cols, vals)) or "type2" (final distance,
+    signature (k_pad, km_pad, u, cols, vals)). Batched "type1"/"type2"
+    additionally accept ``docs_chunk=``."""
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
     if impl == "kernel":
         from repro.kernels import ops
-        return ops.sddmm_spmm_type1(pre_kpad, r_sel, u, cols, vals)
-    raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+        table = {("type1", False): ops.sddmm_spmm_type1,
+                 ("type2", False): ops.sddmm_spmm_type2,
+                 ("type1", True): _kernel_type1_batch,
+                 ("type2", True): _kernel_type2_batch}
+    else:
+        # the unfused baseline shares the fused final distance (the paper's
+        # Fig. 9 baseline differs only in the iteration body).
+        t1 = _type1_unfused if impl == "unfused" else sddmm_spmm_type1
+        t1b = (_unfused_batch_ignoring_chunk if impl == "unfused"
+               else sddmm_spmm_type1_batch)
+        t2b = (_unfused_final_batch_ignoring_chunk if impl == "unfused"
+               else sddmm_spmm_type2_batch)
+        table = {("type1", False): t1,
+                 ("type2", False): sddmm_spmm_type2,
+                 ("type1", True): t1b,
+                 ("type2", True): t2b}
+    return table[(kind, batched)]
+
+
+def _unfused_batch_ignoring_chunk(k_pad, r_sel, u, cols, vals, *,
+                                  docs_chunk=None):
+    del docs_chunk  # the baseline stays deliberately unblocked
+    return _type1_unfused_batch(k_pad, r_sel, u, cols, vals)
+
+
+def _unfused_final_batch_ignoring_chunk(k_pad, km_pad, u, cols, vals, *,
+                                        docs_chunk=None):
+    # same rule for the final distance: the unfused baseline must stay
+    # unblocked END TO END or fused-vs-unfused perf comparisons mix modes.
+    del docs_chunk
+    return sddmm_spmm_type2_batch(k_pad, km_pad, u, cols, vals)
+
+
+def _kernel_type1_batch(k_pad, r_sel, u, cols, vals, *, docs_chunk=None):
+    # the kernel's native cache blocking IS its doc-tile grid: docs_chunk
+    # maps onto docs_blk instead of an outer scan (None/0 = default tile).
+    from repro.kernels import ops
+    kw = {} if not docs_chunk else {"docs_blk": docs_chunk}
+    return ops.sddmm_spmm_type1_batch(k_pad, r_sel, u, cols, vals, **kw)
+
+
+def _kernel_type2_batch(k_pad, km_pad, u, cols, vals, *, docs_chunk=None):
+    from repro.kernels import ops
+    kw = {} if not docs_chunk else {"docs_blk": docs_chunk}
+    return ops.sddmm_spmm_type2_batch(k_pad, km_pad, u, cols, vals, **kw)
+
+
+def _iteration(impl: str, pre_kpad: jax.Array, r_sel: jax.Array,
+               x: jax.Array, cols: jax.Array, vals: jax.Array) -> jax.Array:
+    return _resolve_impl("type1", impl, False)(
+        pre_kpad, r_sel, safe_recip(x), cols, vals)
 
 
 def _final(impl: str, k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
            cols: jax.Array, vals: jax.Array) -> jax.Array:
-    if impl == "kernel":
-        from repro.kernels import ops
-        return ops.sddmm_spmm_type2(k_pad, km_pad, u, cols, vals)
-    return sddmm_spmm_type2(k_pad, km_pad, u, cols, vals)
+    return _resolve_impl("type2", impl, False)(k_pad, km_pad, u, cols, vals)
 
 
 # ---------------------------------------------------------------------------
@@ -224,8 +323,77 @@ def gather_k_batch(k_pad: jax.Array, cols: jax.Array) -> jax.Array:
     return jnp.transpose(k_pad, (0, 2, 1))[:, cols]
 
 
+# Above this many chunks the doc loop rolls up into a lax.scan: the HLO
+# stays O(1) in S at the cost of defeating XLA's cross-op gather fusion
+# inside the loop body (measured up to ~4x slower on CPU) -- callers wanting
+# peak throughput should pick docs_chunk so S stays under this.
+MAX_UNROLLED_CHUNKS = 64
+
+
+def _chunk_over_docs(f, u: jax.Array, cols: jax.Array, vals: jax.Array,
+                     docs_chunk: int | None, pad_col: int) -> jax.Array:
+    """Apply ``f(u_c, cols_c, vals_c)`` over static N-chunks (cache blocking).
+
+    ``f`` maps a doc slice to an output whose LAST axis is the doc axis.
+    Chunking is bitwise exact (see module docstring); a non-dividing N is
+    padded with ELL pad slots (col = pad_col -> zero K column, val = 0) and
+    the pad docs are sliced off the output.
+
+    The chunk loop is UNROLLED into the trace (independent per-chunk chains
+    concatenated on the doc axis): each chain keeps XLA's gather-into-
+    contraction fusion, so the gathered (Q, docs_chunk, nnz, v_r) block is
+    never materialized whole. A `lax.scan` spelling is kept as fallback for
+    very large chunk counts (> MAX_UNROLLED_CHUNKS) where HLO size matters
+    more than the fusion loss.
+    """
+    n = cols.shape[0]
+    if not docs_chunk or docs_chunk >= n:   # None and 0 both mean unchunked
+        return f(u, cols, vals)
+    pad = (-n) % docs_chunk
+    if pad:
+        cols = jnp.pad(cols, ((0, pad), (0, 0)), constant_values=pad_col)
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
+    s = (n + pad) // docs_chunk
+    if s <= MAX_UNROLLED_CHUNKS:
+        outs = [f(u[:, :, c * docs_chunk:(c + 1) * docs_chunk],
+                  cols[c * docs_chunk:(c + 1) * docs_chunk],
+                  vals[c * docs_chunk:(c + 1) * docs_chunk])
+                for c in range(s)]
+        return jnp.concatenate(outs, axis=-1)[..., :n]
+    q, v_r = u.shape[0], u.shape[1]
+    nnz = cols.shape[1]
+    operand = (jnp.moveaxis(u.reshape(q, v_r, s, docs_chunk), 2, 0),
+               cols.reshape(s, docs_chunk, nnz),
+               vals.reshape(s, docs_chunk, nnz))
+
+    def step(_, op):
+        u_c, cols_c, vals_c = op
+        return None, f(u_c, cols_c, vals_c)
+
+    _, out = jax.lax.scan(step, None, operand)       # (S, ..., docs_chunk)
+    out = jnp.moveaxis(out, 0, -2)
+    return out.reshape(*out.shape[:-2], s * docs_chunk)[..., :n]
+
+
+def sddmm_batch(k_pad: jax.Array, u: jax.Array, cols: jax.Array,
+                vals: jax.Array) -> jax.Array:
+    """Batched sampled dense-dense matmul with its own gather (unfused)."""
+    kg = gather_k_batch(k_pad, cols)                 # gather #1
+    w = jnp.einsum("qnki,qin->qnk", kg, u)
+    return jnp.where(vals[None] != 0.0, vals[None] * safe_recip(w), 0.0)
+
+
+def spmm_batch(kor_pad: jax.Array, v: jax.Array, cols: jax.Array
+               ) -> jax.Array:
+    """Batched SpMM -- re-gathers K (the unfused baseline's second gather)."""
+    kg = gather_k_batch(kor_pad, cols)               # gather #2 (unfused cost)
+    return jnp.einsum("qnki,qnk->qin", kg, v)
+
+
 def sddmm_spmm_type1_batch(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
-                           cols: jax.Array, vals: jax.Array) -> jax.Array:
+                           cols: jax.Array, vals: jax.Array, *,
+                           docs_chunk: int | None = None) -> jax.Array:
     """Batched fused iteration body: (Q, v_r, N) <- one gather, two einsums.
 
     Same math per query as `sddmm_spmm_type1`; the explicit q-leading einsum
@@ -234,37 +402,138 @@ def sddmm_spmm_type1_batch(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
     vmap-of-single lowering on CPU, ~4x faster than a (N, nnz, Q, v_r)
     gather layout).
 
+    ``docs_chunk`` scans the same math over N-chunks so the live gathered
+    working set is (Q, docs_chunk, nnz, v_r) -- bitwise identical, see
+    "Batched engine & cache blocking" in the module docstring.
+
     k_pad (Q, v_r, V+1), r_sel (Q, v_r), u (Q, v_r, N), cols/vals (N, nnz).
     """
-    kg = gather_k_batch(k_pad, cols)                 # the ONLY gather
-    w = jnp.einsum("qnki,qin->qnk", kg, u)
-    v = jnp.where(vals[None] != 0.0, vals[None] * safe_recip(w), 0.0)
-    x = jnp.einsum("qnki,qnk->qin", kg, v)
-    return x / r_sel[:, :, None]
+    def chunk(u_c, cols_c, vals_c):
+        kg = gather_k_batch(k_pad, cols_c)           # the ONLY gather
+        w = jnp.einsum("qnki,qin->qnk", kg, u_c)
+        v = jnp.where(vals_c[None] != 0.0,
+                      vals_c[None] * safe_recip(w), 0.0)
+        x = jnp.einsum("qnki,qnk->qin", kg, v)
+        return x / r_sel[:, :, None]
+
+    return _chunk_over_docs(chunk, u, cols, vals, docs_chunk,
+                            pad_col=k_pad.shape[-1] - 1)
 
 
 def sddmm_spmm_type2_batch(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
-                           cols: jax.Array, vals: jax.Array) -> jax.Array:
-    """Batched fused final distance: (Q, N) WMD for all queries at once."""
-    kg = gather_k_batch(k_pad, cols)
-    kmg = gather_k_batch(km_pad, cols)
-    w = jnp.einsum("qnki,qin->qnk", kg, u)
-    v = jnp.where(vals[None] != 0.0, vals[None] * safe_recip(w), 0.0)
-    xm = jnp.einsum("qnki,qnk->qin", kmg, v)
-    return jnp.sum(u * xm, axis=1)                   # (Q, N)
+                           cols: jax.Array, vals: jax.Array, *,
+                           docs_chunk: int | None = None) -> jax.Array:
+    """Batched fused final distance: (Q, N) WMD for all queries at once.
+
+    The per-doc reduction is spelled sum_k v * <(K.*M) col, u> -- i.e. the
+    u contraction happens inside the dot_general and the outer reduce runs
+    over the nnz (last) axis, whose extent is chunk-independent. That keeps
+    ``docs_chunk`` bitwise exact: a reduce over the v_r (middle) axis would
+    let XLA's CPU emitter reassociate differently per doc-chunk shape.
+    """
+    def chunk(u_c, cols_c, vals_c):
+        kg = gather_k_batch(k_pad, cols_c)
+        kmg = gather_k_batch(km_pad, cols_c)
+        w = jnp.einsum("qnki,qin->qnk", kg, u_c)
+        v = jnp.where(vals_c[None] != 0.0,
+                      vals_c[None] * safe_recip(w), 0.0)
+        wm = jnp.einsum("qnki,qin->qnk", kmg, u_c)
+        return jnp.sum(wm * v, axis=-1)              # (Q, docs)
+
+    return _chunk_over_docs(chunk, u, cols, vals, docs_chunk,
+                            pad_col=k_pad.shape[-1] - 1)
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter",))
+def _iteration_batch(impl: str, k_pad: jax.Array, r_sel: jax.Array,
+                     x: jax.Array, cols: jax.Array, vals: jax.Array,
+                     docs_chunk: int | None = None) -> jax.Array:
+    return _resolve_impl("type1", impl, True)(
+        k_pad, r_sel, safe_recip(x), cols, vals, docs_chunk=docs_chunk)
+
+
+def _final_batch(impl: str, k_pad: jax.Array, km_pad: jax.Array,
+                 u: jax.Array, cols: jax.Array, vals: jax.Array,
+                 docs_chunk: int | None = None) -> jax.Array:
+    return _resolve_impl("type2", impl, True)(
+        k_pad, km_pad, u, cols, vals, docs_chunk=docs_chunk)
+
+
+def batched_sinkhorn_loop(iteration, x0: jax.Array, *, max_iter: int,
+                          tol: float | jax.Array = 0.0,
+                          delta_all_reduce=None):
+    """Early-exit Sinkhorn loop with per-query freeze masks (shared core).
+
+    ``iteration`` maps x -> x_new for the whole (Q, v_r, N) batch. A query
+    whose relative iterate delta drops below ``tol`` is *frozen*: its x block
+    stops being written (freezing is exact -- queries never interact), and
+    the loop exits when every query has converged or at ``max_iter``. With
+    ``tol = 0.0`` no query ever freezes (``delta >= 0.0`` always holds, even
+    at an exact fixpoint), so all ``max_iter`` iterations run and the result
+    equals the fixed-``max_iter`` fori_loop exactly -- callers on a fixed
+    budget should prefer a plain fori_loop and skip the delta bookkeeping.
+
+    ``delta_all_reduce`` (distributed hook): maps the (Q,) local delta to the
+    global one, e.g. a pmax over mesh axes -- required under shard_map where
+    each device sees only its doc slice but the vote must be unanimous.
+
+    Returns (x, delta, n_iter): final iterate, per-query relative |dx|_inf,
+    and per-query executed iteration counts (Q,) int32.
+    """
+    q = x0.shape[0]
+
+    def cond(carry):
+        _, delta, _, it = carry
+        return (it < max_iter) & jnp.any(delta >= tol)
+
+    def body(carry):
+        x, delta, n_iter, it = carry
+        active = delta >= tol                              # (Q,)
+        x_new = iteration(x)
+        # relative iterate delta: x spans a huge dynamic range (x ~ K-scale),
+        # so an absolute norm would never cross tol for strongly regularized
+        # K (same rationale as core.convergence).
+        rel = jnp.max(jnp.abs(x_new - x) / (jnp.abs(x) + 1e-30),
+                      axis=(1, 2))                         # per-query delta
+        if delta_all_reduce is not None:
+            rel = delta_all_reduce(rel)
+        x = jnp.where(active[:, None, None], x_new, x)     # freeze converged
+        delta = jnp.where(active, rel, delta)
+        n_iter = n_iter + active.astype(n_iter.dtype)
+        return x, delta, n_iter, it + 1
+
+    x, delta, n_iter, _ = jax.lax.while_loop(
+        cond, body, (x0, jnp.full((q,), jnp.inf, x0.dtype),
+                     jnp.zeros((q,), jnp.int32), jnp.asarray(0)))
+    return x, delta, n_iter
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iter", "impl", "docs_chunk", "tol"))
 def sinkhorn_wmd_sparse_batch(sel_idx: jax.Array, r_sel: jax.Array,
                               cols: jax.Array, vals: jax.Array,
                               vecs: jax.Array, lamb: float, max_iter: int,
-                              row_mask: jax.Array | None = None) -> jax.Array:
+                              row_mask: jax.Array | None = None,
+                              impl: str = "fused",
+                              docs_chunk: int | None = None,
+                              tol: float = 0.0) -> jax.Array:
     """Multi-query sparse PASWD Sinkhorn-WMD. Returns (Q, N) distances.
 
-    The per-query math is identical to `sinkhorn_wmd_sparse` (fused impl);
-    queries never interact -- the batch axis only amortizes the ELL gather,
-    the dispatch, and the K precompute. Matches the sequential per-query
-    solve to fp32 tolerance.
+    The per-query math is identical to `sinkhorn_wmd_sparse` with the same
+    ``impl``; queries never interact -- the batch axis only amortizes the
+    ELL gather, the dispatch, and the K precompute. Matches the sequential
+    per-query solve to fp32 tolerance.
+
+    impl:       "fused" | "unfused" | "kernel" (same table as the
+                single-query solver).
+    docs_chunk: cache-block the SOLVE over N-chunks of this size: the chunk
+                loop sits outside the Sinkhorn loop (docs are independent
+                OT problems), so each chunk's (Q, v_r, docs_chunk) iterate
+                stays cache-resident across all its iterations. Identical
+                results (fp32; bitwise per chunk).
+    tol:        early-exit tolerance for the per-query freeze masks,
+                applied per chunk (a query's docs-chunk block freezes when
+                ITS delta crosses tol); 0.0 (default) reproduces the
+                fixed-``max_iter`` loop exactly.
     """
     pre = precompute_batch(sel_idx, r_sel, vecs, lamb, row_mask)
     k_pad = pad_k(pre.K)
@@ -273,9 +542,26 @@ def sinkhorn_wmd_sparse_batch(sel_idx: jax.Array, r_sel: jax.Array,
     n = cols.shape[0]
     x0 = jnp.full((q, v_r, n), 1.0 / v_r, dtype=pre.K.dtype)
 
-    def body(_, x):
-        return sddmm_spmm_type1_batch(k_pad, pre.r, safe_recip(x), cols, vals)
+    def solve_chunk(x0_c, cols_c, vals_c):
+        # docs never interact across the Sinkhorn iteration (each doc is an
+        # independent 2-marginal OT problem), so the chunk loop hoists
+        # OUTSIDE the whole solve: each chunk runs all its iterations while
+        # its (Q, v_r, docs_chunk) iterate stays cache-resident -- measured
+        # 1.5-3.3x over the iteration-major unchunked loop at bulk shapes
+        # on CPU (see "Batched engine & cache blocking").
+        def iteration(x):
+            return _iteration_batch(impl, k_pad, pre.r, x, cols_c, vals_c)
 
-    x = jax.lax.fori_loop(0, max_iter, body, x0)
-    u = safe_recip(x)
-    return sddmm_spmm_type2_batch(k_pad, km_pad, u, cols, vals)
+        if tol:
+            x, _, _ = batched_sinkhorn_loop(iteration, x0_c,
+                                            max_iter=max_iter, tol=tol)
+        else:
+            # fixed budget: skip the per-iteration delta/freeze bookkeeping
+            # entirely (it could never fire -- delta >= 0.0 always holds)
+            x = jax.lax.fori_loop(0, max_iter,
+                                  lambda _, xx: iteration(xx), x0_c)
+        return _final_batch(impl, k_pad, km_pad, safe_recip(x),
+                            cols_c, vals_c)
+
+    return _chunk_over_docs(solve_chunk, x0, cols, vals, docs_chunk,
+                            pad_col=k_pad.shape[-1] - 1)

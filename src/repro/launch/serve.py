@@ -19,6 +19,16 @@ def main():
     ap.add_argument("--batch-queries", action="store_true",
                     help="sinkhorn-wmd: serve all queries in one batched "
                          "(Q, v_r, N) solve instead of a per-query loop")
+    ap.add_argument("--impl", default="fused",
+                    choices=("fused", "unfused", "kernel"),
+                    help="sinkhorn-wmd: contraction path for the batched "
+                         "engine (kernel = Pallas, interpret on CPU)")
+    ap.add_argument("--docs-chunk", type=int, default=0,
+                    help="sinkhorn-wmd: cache-block the batched iteration "
+                         "over doc chunks of this size (0 = unchunked)")
+    ap.add_argument("--tol", type=float, default=0.0,
+                    help="sinkhorn-wmd: early-exit tolerance for the "
+                         "batched solve (0 = fixed max_iter)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     args = ap.parse_args()
@@ -51,7 +61,10 @@ def main():
                            embed_dim=cfg.embed_dim, num_docs=cfg.num_docs,
                            num_queries=args.num_queries,
                            query_words=min(cfg.v_r - 1, 19))
-        svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell)
+        svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
+                         impl=args.impl,
+                         docs_chunk=args.docs_chunk or None,
+                         tol=args.tol)
         if args.batch_queries:
             svc.query_batch(data.queries)          # compile outside timing
             t0 = time.perf_counter()

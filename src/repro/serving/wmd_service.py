@@ -7,7 +7,7 @@ engine with one psum per iteration.
 Service API
 -----------
   query(r)                  -- one (V,) histogram -> (N,) distances.
-  query_batch(rs)           -- Q histograms -> (Q, N) in ONE device program:
+  query_batch(rs, impl=...) -- Q histograms -> (Q, N) in ONE device program:
       queries are padded to the service's v_r bucket (exact mask-based
       padding, `core.distributed.pad_query_batch`) and admitted in
       power-of-two Q buckets (bounding retrace count); the batched
@@ -15,9 +15,24 @@ Service API
       Sinkhorn iteration across all Q queries (`build_wmd_batch_fn`).
       Slots added by Q-bucketing carry an all-zero row mask, so they cost
       flops but contribute nothing and are sliced off before returning.
+      ``impl`` ("fused" | "unfused" | "kernel") overrides the service
+      default per call (built fns are cached per impl).
+      Admission policy: Q = 1 routes to the sequential path -- the batched
+      engine's (Q, v_r, N) padding/precompute overhead makes a singleton
+      *slower* than the per-query program (speedup 0.96x at Q=1 in the
+      BENCH_query_batch.json artifact).
   query_batch_sequential(rs) -- the per-query dispatch loop, kept as the
       correctness oracle and the baseline for bench_query_batch.py.
   top_k(r, k)               -- nearest-k doc ids + distances.
+
+Perf knobs (constructor fields, forwarded to `build_wmd_batch_fn`):
+  impl       -- default contraction path for query_batch.
+  docs_chunk -- cache-block the batched iteration over doc chunks of this
+                size; at bulk shapes this keeps the (Q, docs_chunk, nnz,
+                v_r) gathered working set cache-resident (see
+                core.sparse_sinkhorn "Batched engine & cache blocking").
+  tol        -- early-exit tolerance: converged queries freeze, the solve
+                stops when all queries converge (0.0 = fixed max_iter).
 
 `examples/wmd_query_service.py` runs it end-to-end; `launch/serve.py`
 exposes it via --arch sinkhorn-wmd (add --batch-queries for the batched
@@ -43,27 +58,48 @@ def _next_pow2(q: int) -> int:
     return 1 << (q - 1).bit_length()
 
 
+# sentinel: "use the service's docs_chunk" (None already means unchunked)
+_UNSET = object()
+
+
 @dataclasses.dataclass
 class WMDService:
     mesh: jax.sharding.Mesh
     cfg: wmd_cfg.WMDConfig
     vecs: np.ndarray
     ell: formats.EllDocs
+    impl: str = "fused"
+    docs_chunk: int | None = None
+    tol: float = 0.0
 
     def __post_init__(self):
         model_size = self.mesh.shape["model"]
         self._rb = formats.rebucket_for_vocab_shards(self.ell, model_size)
-        doc_axes = tuple(a for a in ("pod", "data")
-                         if a in self.mesh.axis_names)
+        self._doc_axes = tuple(a for a in ("pod", "data")
+                               if a in self.mesh.axis_names)
         self._fn = build_wmd_fn(self.mesh, lamb=self.cfg.lamb,
                                 max_iter=self.cfg.max_iter,
-                                doc_axes=doc_axes)
-        self._batch_fn = build_wmd_batch_fn(self.mesh, lamb=self.cfg.lamb,
-                                            max_iter=self.cfg.max_iter,
-                                            doc_axes=doc_axes)
+                                doc_axes=self._doc_axes)
+        self._batch_fns: dict[tuple, object] = {}
         self._vecs_d, self._cols_d, self._vals_d = shard_wmd_inputs(
             self.mesh, self.vecs, self._rb.cols, self._rb.vals,
-            doc_axes=doc_axes)
+            doc_axes=self._doc_axes)
+
+    def _batch_fn(self, impl: str, docs_chunk: int | None):
+        """Batched solver for (impl, docs_chunk, tol), built once and cached
+        -- sweeping chunk sizes (bench_query_batch) shares one service and
+        one device-sharded corpus instead of one service per variant. tol is
+        part of the key so mutating svc.tol can't serve a stale solver."""
+        key = (impl, docs_chunk, self.tol)
+        fn = self._batch_fns.get(key)
+        if fn is None:
+            fn = build_wmd_batch_fn(self.mesh, lamb=self.cfg.lamb,
+                                    max_iter=self.cfg.max_iter,
+                                    doc_axes=self._doc_axes, impl=impl,
+                                    docs_chunk=docs_chunk,
+                                    tol=self.tol)
+            self._batch_fns[key] = fn
+        return fn
 
     def query(self, r: np.ndarray) -> np.ndarray:
         """r: (V,) sparse query histogram -> (N,) distances."""
@@ -74,15 +110,33 @@ class WMDService:
                        self._vals_d)
         return np.asarray(wmd)
 
-    def query_batch(self, rs: Sequence[np.ndarray]) -> np.ndarray:
+    def query_batch(self, rs: Sequence[np.ndarray],
+                    impl: str | None = None,
+                    docs_chunk=_UNSET) -> np.ndarray:
         """Multiple queries -> (Q, N) via the batched (Q, v_r, N) engine.
 
         One ELL gather and one psum per Sinkhorn iteration serve the whole
         batch; Q is rounded up to a power of two (retrace bound), with the
-        filler slots masked to contribute exactly zero.
+        filler slots masked to contribute exactly zero. ``impl`` /
+        ``docs_chunk`` override the service defaults for this call (pass
+        docs_chunk=0 for explicitly unchunked); built fns are cached per
+        (impl, docs_chunk).
         """
         if len(rs) == 0:
             return np.zeros((0, self.ell.num_docs), np.float32)
+        if (len(rs) == 1 and impl is None and docs_chunk is _UNSET
+                and self.impl == "fused" and self.tol == 0.0):
+            # admission policy: a singleton is *slower* batched than
+            # sequential (0.96x in BENCH_query_batch.json -- the (Q, v_r, N)
+            # precompute/padding overhead has nothing to amortize), so route
+            # Q = 1 to the per-query program. Taken only when the sequential
+            # path implements the configured engine: an explicit per-call
+            # override, a non-fused service impl, or early-exit tol all
+            # bypass it (the sequential program is fused fixed-iteration).
+            # A service-level docs_chunk does NOT bypass -- chunking is
+            # result-identical and the sequential route is the faster
+            # singleton plan either way.
+            return self.query_batch_sequential(rs)
         sels, rsels = zip(*[select_query(r) for r in rs])
         sel_b, r_b, mask_b = pad_query_batch(sels, rsels, self.cfg.v_r)
         q = len(rs)
@@ -96,9 +150,11 @@ class WMDService:
                 [r_b, np.ones((q_pad, self.cfg.v_r), r_b.dtype)])
             mask_b = np.concatenate(
                 [mask_b, np.zeros((q_pad, self.cfg.v_r), mask_b.dtype)])
-        wmd = self._batch_fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
-                             jnp.asarray(mask_b), self._vecs_d, self._cols_d,
-                             self._vals_d)
+        dc = self.docs_chunk if docs_chunk is _UNSET else (docs_chunk or None)
+        fn = self._batch_fn(impl or self.impl, dc)
+        wmd = fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
+                 jnp.asarray(mask_b), self._vecs_d, self._cols_d,
+                 self._vals_d)
         return np.asarray(wmd)[:q]
 
     def query_batch_sequential(self, rs: Sequence[np.ndarray]) -> np.ndarray:

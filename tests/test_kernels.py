@@ -10,6 +10,10 @@ from repro.core import (ell_from_dense, pad_k, precompute,
 from repro.core import sparse_sinkhorn as core_ss
 from repro.kernels import ops, ref
 
+# the whole module exercises the Pallas kernel path; CI runs it explicitly
+# via `pytest -m kernel` (see .github/workflows/ci.yml)
+pytestmark = pytest.mark.kernel
+
 
 def _problem(v, w, n, vr, nnz_hi, seed, dtype=np.float32):
     rng = np.random.default_rng(seed)
