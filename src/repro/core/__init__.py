@@ -8,14 +8,17 @@ Layers (bottom-up):
   ot              -- generic Sinkhorn OT (shared with the MoE router)
   convergence     -- while-x-changes early-exit solver
   distributed     -- shard_map multi-chip / multi-pod engine
+  kcache          -- cross-query word-id-keyed K/KM row cache
 """
 from repro.core.cost_matrix import cdist, cdist_direct, cdist_matmul
 from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
                                 ell_from_dense, ell_from_csc,
                                 ell_from_doc_lists, pad_docs,
                                 rebucket_for_vocab_shards)
-from repro.core.sinkhorn import (SinkhornPrecompute, precompute, select_query,
+from repro.core.sinkhorn import (SinkhornPrecompute, assemble_precompute,
+                                 precompute, precompute_rows, select_query,
                                  sinkhorn_wmd_dense)
+from repro.core.kcache import KCache, KCacheStats
 from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute,
                                         batched_sinkhorn_loop, pad_k,
                                         precompute_batch, sddmm, spmm,
@@ -24,7 +27,8 @@ from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute,
                                         sddmm_spmm_type1_batch,
                                         sddmm_spmm_type2_batch,
                                         sinkhorn_wmd_sparse,
-                                        sinkhorn_wmd_sparse_batch)
+                                        sinkhorn_wmd_sparse_batch,
+                                        sinkhorn_wmd_sparse_batch_stripes)
 from repro.core.ot import SinkhornResult, sinkhorn_divergence, sinkhorn_plan
 from repro.core.convergence import (BatchConvergedWMD, ConvergedWMD,
                                     sinkhorn_wmd_converged,
@@ -35,13 +39,15 @@ __all__ = [
     "BucketedEll", "EllDocs", "bucket_by_length",
     "ell_from_dense", "ell_from_csc", "ell_from_doc_lists",
     "pad_docs", "rebucket_for_vocab_shards",
-    "SinkhornPrecompute", "precompute", "select_query", "sinkhorn_wmd_dense",
+    "SinkhornPrecompute", "assemble_precompute", "precompute",
+    "precompute_rows", "select_query", "sinkhorn_wmd_dense",
+    "KCache", "KCacheStats",
     "pad_k", "sddmm", "spmm", "sddmm_spmm_type1", "sddmm_spmm_type2",
     "sinkhorn_wmd_sparse",
     "BatchedSinkhornPrecompute", "precompute_batch",
     "batched_sinkhorn_loop", "sddmm_batch", "spmm_batch",
     "sddmm_spmm_type1_batch", "sddmm_spmm_type2_batch",
-    "sinkhorn_wmd_sparse_batch",
+    "sinkhorn_wmd_sparse_batch", "sinkhorn_wmd_sparse_batch_stripes",
     "SinkhornResult", "sinkhorn_divergence", "sinkhorn_plan",
     "ConvergedWMD", "sinkhorn_wmd_converged",
     "BatchConvergedWMD", "sinkhorn_wmd_converged_batch",

@@ -235,52 +235,121 @@ def build_wmd_batch_fn(mesh: Mesh, *, lamb: float, max_iter: int,
     vote_axes = (model_axis, *doc_axes)
 
     def per_device(vecs_sel, r_sel, row_mask, vecs_loc, cols_b, vals_b):
-        cols_loc = cols_b[0]
-        vals_loc = vals_b[0]
         k, km = masked_k_batch(vecs_sel, vecs_loc, lamb, row_mask)
-        k_pad, km_pad = pad_k(k), pad_k(km)
-        q, v_r = r_sel.shape
-        ones_r = jnp.ones_like(r_sel)
-        type1 = ss._resolve_impl("type1", impl, True)
-        type2 = ss._resolve_impl("type2", impl, True)
-        iter_chunk = docs_chunk if chunk_placement == "iteration" else None
+        wmd, n_iter, delta = _local_batched_solve(
+            pad_k(k), pad_k(km), r_sel, cols_b[0], vals_b[0],
+            max_iter=max_iter, model_axis=model_axis, impl=impl,
+            docs_chunk=docs_chunk, chunk_placement=chunk_placement, tol=tol,
+            vote_axes=vote_axes)
+        if with_info:
+            return wmd, n_iter, delta
+        return wmd
 
-        def solve_chunk(x0_c, cols_c, vals_c):
-            def iteration(x):
-                u = safe_recip(x)
-                x_part = type1(k_pad, ones_r, u, cols_c, vals_c,
-                               docs_chunk=iter_chunk)
-                x_full = jax.lax.psum(x_part, model_axis)  # THE collective
-                return x_full / r_sel[:, :, None]
+    fn = shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
+    return jax.jit(fn)
 
-            if tol:
-                x, delta, n_iter = ss.batched_sinkhorn_loop(
-                    iteration, x0_c, max_iter=max_iter, tol=tol,
-                    delta_all_reduce=lambda d: jax.lax.pmax(d, vote_axes))
-            else:
-                x = jax.lax.fori_loop(0, max_iter,
-                                      lambda _, xx: iteration(xx), x0_c)
-                delta = jnp.zeros((q,), x0_c.dtype)
-                n_iter = jnp.full((q,), max_iter, jnp.int32)
+
+def _local_batched_solve(k_pad, km_pad, r_sel, cols_loc, vals_loc, *,
+                         max_iter: int, model_axis: str, impl: str,
+                         docs_chunk: int | None, chunk_placement: str,
+                         tol: float, vote_axes):
+    """Per-device batched Sinkhorn solve on local (Q, v_r, Vloc+1) stripes.
+
+    The shared core of `build_wmd_batch_fn` (stripes computed in-program
+    from embeddings) and `build_wmd_batch_fn_stripes` (stripes preassembled
+    by the cross-query cache). Returns (wmd, n_iter, delta); runs under
+    shard_map, issuing one psum over ``model_axis`` per iteration.
+    """
+    q, v_r = r_sel.shape
+    ones_r = jnp.ones_like(r_sel)
+    type1 = ss._resolve_impl("type1", impl, True)
+    type2 = ss._resolve_impl("type2", impl, True)
+    iter_chunk = docs_chunk if chunk_placement == "iteration" else None
+
+    def solve_chunk(x0_c, cols_c, vals_c):
+        def iteration(x):
             u = safe_recip(x)
-            wmd_part = type2(k_pad, km_pad, u, cols_c, vals_c,
-                             docs_chunk=iter_chunk)
-            return jax.lax.psum(wmd_part, model_axis), n_iter, delta
+            x_part = type1(k_pad, ones_r, u, cols_c, vals_c,
+                           docs_chunk=iter_chunk)
+            x_full = jax.lax.psum(x_part, model_axis)  # THE collective
+            return x_full / r_sel[:, :, None]
 
-        n_loc = cols_loc.shape[0]
-        x0 = jnp.full((q, v_r, n_loc), 1.0 / v_r, dtype=k.dtype)
-        if chunk_placement == "solve" and docs_chunk and docs_chunk < n_loc:
-            # unrolled chunk loop (trailing chunk may be smaller -- python
-            # slicing keeps shapes static per chunk, no doc padding needed)
-            parts = [solve_chunk(x0[:, :, s:s + docs_chunk],
-                                 cols_loc[s:s + docs_chunk],
-                                 vals_loc[s:s + docs_chunk])
-                     for s in range(0, n_loc, docs_chunk)]
-            wmd = jnp.concatenate([p[0] for p in parts], axis=-1)
-            n_iter = jnp.max(jnp.stack([p[1] for p in parts]), axis=0)
-            delta = jnp.max(jnp.stack([p[2] for p in parts]), axis=0)
+        if tol:
+            x, delta, n_iter = ss.batched_sinkhorn_loop(
+                iteration, x0_c, max_iter=max_iter, tol=tol,
+                delta_all_reduce=lambda d: jax.lax.pmax(d, vote_axes))
         else:
-            wmd, n_iter, delta = solve_chunk(x0, cols_loc, vals_loc)
+            x = jax.lax.fori_loop(0, max_iter,
+                                  lambda _, xx: iteration(xx), x0_c)
+            delta = jnp.zeros((q,), x0_c.dtype)
+            n_iter = jnp.full((q,), max_iter, jnp.int32)
+        u = safe_recip(x)
+        wmd_part = type2(k_pad, km_pad, u, cols_c, vals_c,
+                         docs_chunk=iter_chunk)
+        return jax.lax.psum(wmd_part, model_axis), n_iter, delta
+
+    n_loc = cols_loc.shape[0]
+    x0 = jnp.full((q, v_r, n_loc), 1.0 / v_r, dtype=k_pad.dtype)
+    if chunk_placement == "solve" and docs_chunk and docs_chunk < n_loc:
+        # unrolled chunk loop (trailing chunk may be smaller -- python
+        # slicing keeps shapes static per chunk, no doc padding needed)
+        parts = [solve_chunk(x0[:, :, s:s + docs_chunk],
+                             cols_loc[s:s + docs_chunk],
+                             vals_loc[s:s + docs_chunk])
+                 for s in range(0, n_loc, docs_chunk)]
+        wmd = jnp.concatenate([p[0] for p in parts], axis=-1)
+        n_iter = jnp.max(jnp.stack([p[1] for p in parts]), axis=0)
+        delta = jnp.max(jnp.stack([p[2] for p in parts]), axis=0)
+    else:
+        wmd, n_iter, delta = solve_chunk(x0, cols_loc, vals_loc)
+    return wmd, n_iter, delta
+
+
+def build_wmd_batch_fn_stripes(mesh: Mesh, *, max_iter: int,
+                               doc_axes: Sequence[str] = ("data",),
+                               model_axis: str = "model",
+                               impl: str = "fused",
+                               docs_chunk: int | None = None,
+                               chunk_placement: str = "solve",
+                               tol: float = 0.0, with_info: bool = False):
+    """Batched WMD solver consuming *preassembled* K / K.*M stripes.
+
+    The distributed consumer of the cross-query cache (`core.kcache`): the
+    per-query precompute no longer happens inside the device program -- the
+    cache hands each vocab shard its stripe slice, already masked for pad
+    query rows and carrying the shard-local zero pad column, laid out like
+    the rebucketed ELL:
+
+      k_b, km_b (S_model, Q, v_r, Vloc+1)  P(model)  -- per-shard stripes
+      r_sel     (Q, v_r)                   replicated (pad rows = 1.0)
+      cols_b    (S_model, N, nnz_loc)      P(model, doc_axes)
+      vals_b    (S_model, N, nnz_loc)      P(model, doc_axes)
+
+    and returns wmd (Q, N) sharded over doc_axes (plus (n_iter, delta) with
+    ``with_info=True``). No ``lamb``: it is baked into the cached rows, and
+    the cache invalidates itself on a lambda change. Everything else
+    (impl table, docs_chunk/chunk_placement, early-exit vote) is identical
+    to `build_wmd_batch_fn`, with which it shares `_local_batched_solve`.
+    """
+    if chunk_placement not in ("solve", "iteration"):
+        raise ValueError(f"chunk_placement must be 'solve' or 'iteration', "
+                         f"got {chunk_placement!r}")
+    in_specs = (P(model_axis, None, None, None),
+                P(model_axis, None, None, None),
+                P(None, None),
+                P(model_axis, *[tuple(doc_axes)], None),
+                P(model_axis, *[tuple(doc_axes)], None))
+    wmd_spec = P(None, tuple(doc_axes))
+    out_specs = (wmd_spec, P(None), P(None)) if with_info else wmd_spec
+    vote_axes = (model_axis, *doc_axes)
+
+    def per_device(k_b, km_b, r_sel, cols_b, vals_b):
+        wmd, n_iter, delta = _local_batched_solve(
+            k_b[0], km_b[0], r_sel, cols_b[0], vals_b[0],
+            max_iter=max_iter, model_axis=model_axis, impl=impl,
+            docs_chunk=docs_chunk, chunk_placement=chunk_placement, tol=tol,
+            vote_axes=vote_axes)
         if with_info:
             return wmd, n_iter, delta
         return wmd

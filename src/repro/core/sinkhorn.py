@@ -29,8 +29,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_matrix import cdist
-
 
 class SinkhornPrecompute(NamedTuple):
     """Iteration-invariant matrices (paper Fig. 4: ``precompute_matrices``)."""
@@ -51,17 +49,53 @@ def select_query(r: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return sel.astype(np.int32), r_sel
 
 
-def precompute(sel_idx: jax.Array, r_sel: jax.Array, vecs: jax.Array,
-               lamb: float) -> SinkhornPrecompute:
-    """M = cdist(vecs[sel], vecs); K = exp(-lamb M); K/r; K*M."""
-    m = cdist(vecs[sel_idx], vecs)                      # (v_r, V)
+def precompute_rows(word_ids: jax.Array, vecs: jax.Array, lamb: float,
+                    *, b2: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """The *cacheable* half of the precompute: (K, K.*M) rows keyed purely
+    by (word_id, lamb) -- nothing query-specific enters.
+
+    One row per requested word id: K[i] = exp(-lamb * |vecs[id_i] - vecs|),
+    KM[i] = K[i] * M[i]. ``b2`` optionally supplies the precomputed
+    per-vocab-word squared norms (sum(vecs**2, -1)); `core.kcache` passes it
+    so the O(V*w) term is paid once per corpus instead of once per miss
+    batch. The math is the `cdist_matmul` MXU expansion spelled inline so
+    cached rows are bit-identical to the from-scratch `precompute` path.
+    """
+    a = vecs[word_ids]                                  # (m, w)
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    if b2 is None:
+        b2 = jnp.sum(vecs * vecs, axis=-1)
+    m = jnp.sqrt(jnp.maximum(a2 + b2[None, :] - 2.0 * (a @ vecs.T), 0.0))
     k = jnp.exp(-lamb * m)
+    return k, k * m
+
+
+def assemble_precompute(k_rows: jax.Array, km_rows: jax.Array,
+                        r_sel: jax.Array) -> SinkhornPrecompute:
+    """The *per-query* half: a cheap row scale over gathered rows.
+
+    K_over_r = diag(1/r) K is the only query-dependent matrix; K and K.*M
+    come straight from `precompute_rows` (or the cross-query cache) for the
+    query's word ids.
+    """
     return SinkhornPrecompute(
-        K=k,
-        K_over_r=k / r_sel[:, None],
-        KM=k * m,
+        K=k_rows,
+        K_over_r=k_rows / r_sel[:, None],
+        KM=km_rows,
         r=r_sel,
     )
+
+
+def precompute(sel_idx: jax.Array, r_sel: jax.Array, vecs: jax.Array,
+               lamb: float) -> SinkhornPrecompute:
+    """M = cdist(vecs[sel], vecs); K = exp(-lamb M); K/r; K*M.
+
+    Composition of the cacheable rows (`precompute_rows`) and the per-query
+    scale (`assemble_precompute`) -- `core.kcache` splits exactly here.
+    """
+    k, km = precompute_rows(sel_idx, vecs, lamb)
+    return assemble_precompute(k, km, r_sel)
 
 
 def _safe_recip(x):

@@ -536,11 +536,21 @@ def sinkhorn_wmd_sparse_batch(sel_idx: jax.Array, r_sel: jax.Array,
                 fixed-``max_iter`` loop exactly.
     """
     pre = precompute_batch(sel_idx, r_sel, vecs, lamb, row_mask)
-    k_pad = pad_k(pre.K)
-    km_pad = pad_k(pre.KM)
+    return _solve_batch_stripes(pad_k(pre.K), pad_k(pre.KM), pre.r,
+                                cols, vals, max_iter=max_iter, impl=impl,
+                                docs_chunk=docs_chunk, tol=tol)
+
+
+def _solve_batch_stripes(k_pad: jax.Array, km_pad: jax.Array,
+                         r_sel: jax.Array, cols: jax.Array, vals: jax.Array,
+                         *, max_iter: int, impl: str,
+                         docs_chunk: int | None, tol: float) -> jax.Array:
+    """Shared solver core on preassembled (Q, v_r, V+1) stripes (with the
+    zero pad column already appended -- `core.kcache` stores rows that way,
+    so the cached hot path never runs `pad_k`)."""
     q, v_r = r_sel.shape
     n = cols.shape[0]
-    x0 = jnp.full((q, v_r, n), 1.0 / v_r, dtype=pre.K.dtype)
+    x0 = jnp.full((q, v_r, n), 1.0 / v_r, dtype=k_pad.dtype)
 
     def solve_chunk(x0_c, cols_c, vals_c):
         # docs never interact across the Sinkhorn iteration (each doc is an
@@ -550,7 +560,7 @@ def sinkhorn_wmd_sparse_batch(sel_idx: jax.Array, r_sel: jax.Array,
         # 1.5-3.3x over the iteration-major unchunked loop at bulk shapes
         # on CPU (see "Batched engine & cache blocking").
         def iteration(x):
-            return _iteration_batch(impl, k_pad, pre.r, x, cols_c, vals_c)
+            return _iteration_batch(impl, k_pad, r_sel, x, cols_c, vals_c)
 
         if tol:
             x, _, _ = batched_sinkhorn_loop(iteration, x0_c,
@@ -565,3 +575,28 @@ def sinkhorn_wmd_sparse_batch(sel_idx: jax.Array, r_sel: jax.Array,
 
     return _chunk_over_docs(solve_chunk, x0, cols, vals, docs_chunk,
                             pad_col=k_pad.shape[-1] - 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_iter", "impl", "docs_chunk", "tol"))
+def sinkhorn_wmd_sparse_batch_stripes(k_pad: jax.Array, km_pad: jax.Array,
+                                      r_sel: jax.Array, cols: jax.Array,
+                                      vals: jax.Array, max_iter: int,
+                                      impl: str = "fused",
+                                      docs_chunk: int | None = None,
+                                      tol: float = 0.0) -> jax.Array:
+    """Batched solver on *preassembled* precompute stripes. Returns (Q, N).
+
+    The cross-query cache entry point: callers (`core.kcache` via
+    `serving.wmd_service`, or anything that hoists the precompute) pass
+    k_pad / km_pad of shape (Q, v_r, V+1) -- per-query K and K.*M stripes
+    with the trailing zero pad column already in place (ELL pad slots gather
+    it) and pad query rows already zeroed. ``r_sel`` (Q, v_r) carries 1.0 in
+    pad rows; K_over_r remains the in-solver per-row 1/r scale, so no third
+    stripe is materialized. Identical math (same impl table, chunking and
+    early-exit semantics) as `sinkhorn_wmd_sparse_batch`, which now merely
+    computes the stripes from embeddings and delegates here.
+    """
+    return _solve_batch_stripes(k_pad, km_pad, r_sel, cols, vals,
+                                max_iter=max_iter, impl=impl,
+                                docs_chunk=docs_chunk, tol=tol)

@@ -1,5 +1,5 @@
 """Data pipelines: synthetic WMD corpus + LM token batches."""
-from repro.data.corpus import WMDData, make_corpus
+from repro.data.corpus import WMDData, make_corpus, zipf_query_stream
 from repro.data.tokens import TokenPipeline, batch_struct
 
-__all__ = ["WMDData", "make_corpus", "TokenPipeline", "batch_struct"]
+__all__ = ["WMDData", "make_corpus", "zipf_query_stream", "TokenPipeline", "batch_struct"]

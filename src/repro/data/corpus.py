@@ -40,6 +40,32 @@ def zipf_ids(rng: np.random.Generator, n: int, vocab: int,
     return np.fromiter(list(ids)[:n], dtype=np.int64)
 
 
+def zipf_query_stream(*, vocab_size: int, query_words: int = 19,
+                      s: float = 1.07, seed: int = 0):
+    """Infinite seeded generator of Zipf-skewed (V,) query histograms.
+
+    The realistic serving workload in one line: successive queries draw
+    their word ids from the same Zipf(s) head, so most ids repeat across
+    queries -- exactly the redundancy the cross-query K cache
+    (`core.kcache`) exploits. Shared by `benchmarks/bench_query_batch.py
+    --zipf` and the cache tests; take Q-sized batches with
+    ``[next(stream) for _ in range(q)]`` (or itertools.islice).
+
+    Args:
+      vocab_size:  V (ids above it are rejected, as in `zipf_ids`).
+      query_words: distinct nonzero words per query (the paper's v_r ~ 19).
+      s:           Zipf exponent; larger = heavier head = higher hit rates.
+      seed:        stream is fully determined by (seed, s, query_words, V).
+    """
+    rng = np.random.default_rng(seed)
+    while True:
+        r = np.zeros(vocab_size, np.float32)
+        ids = zipf_ids(rng, query_words, vocab_size, s=s)
+        freq = rng.integers(1, 4, size=query_words).astype(np.float32)
+        r[ids] = freq / freq.sum()
+        yield r
+
+
 def make_corpus(*, vocab_size: int = 100_000, embed_dim: int = 300,
                 num_docs: int = 5_000, num_queries: int = 10,
                 mean_words: float = 35.0, query_words: int = 19,

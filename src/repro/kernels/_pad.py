@@ -1,0 +1,21 @@
+"""The one pad-axis-to-multiple helper shared by the kernel wrappers.
+
+Every Pallas wrapper in this package pads some axis up to a tile/sublane
+multiple and slices the result back; keeping a single implementation stops
+the copies from drifting (pad value, dtype handling) independently.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_axis(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    """Zero-pad (or ``value``-pad) ``axis`` of ``x`` up to a multiple of
+    ``mult``; returns ``x`` unchanged when already aligned."""
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

@@ -8,6 +8,10 @@ the (small) query-side matrix ``a`` stays VMEM-resident across all steps.
 Tile sizing: v_tile defaults to 512 so a (512, 300) f32 embedding tile plus
 the (v_r, 512) output tile stay well under VMEM; both 512 and the padded
 embedding width are 128-lane aligned for MXU occupancy.
+
+The vocab axis is padded up to ``v_tile`` inside the kernel wrapper and the
+result sliced back, so arbitrary V works (zero-padded embedding rows yield
+throwaway columns that never escape).
 """
 from __future__ import annotations
 
@@ -16,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels._pad import pad_axis
 
 
 def _cdist_kernel(a_ref, b_ref, out_ref, *, squared: bool):
@@ -34,11 +40,17 @@ def _cdist_kernel(a_ref, b_ref, out_ref, *, squared: bool):
                    static_argnames=("v_tile", "squared", "interpret"))
 def cdist(a: jax.Array, b: jax.Array, *, v_tile: int = 512,
           squared: bool = False, interpret: bool = False) -> jax.Array:
-    """Pairwise distance a (v_r, w) vs b (V, w) -> (v_r, V). V % v_tile == 0."""
+    """Pairwise distance a (v_r, w) vs b (V, w) -> (v_r, V).
+
+    V is padded to a multiple of ``v_tile`` and the result sliced back, so
+    arbitrary vocab sizes work.
+    """
     v_r, w = a.shape
-    v, _ = b.shape
-    grid = (v // v_tile,)
-    return pl.pallas_call(
+    v = b.shape[0]
+    b_p = pad_axis(b, 0, v_tile)
+    v_p = b_p.shape[0]
+    grid = (v_p // v_tile,)
+    out = pl.pallas_call(
         functools.partial(_cdist_kernel, squared=squared),
         grid=grid,
         in_specs=[
@@ -46,6 +58,7 @@ def cdist(a: jax.Array, b: jax.Array, *, v_tile: int = 512,
             pl.BlockSpec((v_tile, w), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((v_r, v_tile), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((v_r, v), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((v_r, v_p), a.dtype),
         interpret=interpret,
-    )(a, b)
+    )(a, b_p)
+    return out[:, :v]

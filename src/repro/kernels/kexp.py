@@ -1,8 +1,8 @@
-"""Fused cdist -> (K, K.*M) precompute kernel (beyond-paper fusion).
+"""Fused cdist -> (K, K.*M) precompute kernels (beyond-paper fusion).
 
 The paper precomputes M, K = exp(-lambda M), K_over_r and K.*M as separate
 passes (Fig. 4 ``precompute_matrices``). Each pass round-trips a (v_r, V)
-matrix through memory. This kernel fuses the whole precompute: each vocab
+matrix through memory. These kernels fuse the whole precompute: each vocab
 tile's distance block is produced in VMEM (MXU matmul expansion, as in
 `kernels.cdist`), exponentiated and scaled in-register, and only the two
 matrices the solver actually reads (K and K.*M) are written to HBM. M itself
@@ -12,6 +12,22 @@ because its K/KM layouts are row-scaled on the fly instead.
 Saves, per precompute: one (v_r, V) store + one load of M, and one full
 elementwise pass -- at dbpedia scale (32 x 100k f32) ~25 MB of traffic per
 query, i.e. the precompute memory term drops by ~1/3 (EXPERIMENTS.md §Perf).
+
+Two entry points:
+
+  * `cdist_kexp`      -- the per-query stripe: ``a`` (one query's v_r words)
+                         stays VMEM-resident, grid tiles the vocab axis only.
+  * `cdist_kexp_rows` -- the row-subset variant backing the cross-query
+                         K cache (`core.kcache`): the row operand is an
+                         arbitrary batch of *cache-miss* word embeddings, so
+                         the grid tiles rows x vocab tiles -- row count is
+                         unbounded (it is the batch's unique-miss count, not
+                         a query's v_r) and each (rows_blk, v_tile) block is
+                         produced independently.
+
+Both pad the vocab axis up to ``v_tile`` internally and slice the result, so
+arbitrary V works (zero-padded embedding rows produce garbage columns that
+never leave the kernel wrapper).
 """
 from __future__ import annotations
 
@@ -20,6 +36,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels._pad import pad_axis
 
 
 def _kexp_kernel(a_ref, b_ref, k_ref, km_ref, *, lamb: float):
@@ -40,11 +58,17 @@ def _kexp_kernel(a_ref, b_ref, k_ref, km_ref, *, lamb: float):
 def cdist_kexp(a: jax.Array, b: jax.Array, *, lamb: float,
                v_tile: int = 512, interpret: bool = False
                ) -> tuple[jax.Array, jax.Array]:
-    """Fused precompute: a (v_r, w), b (V, w) -> (K, K.*M), each (v_r, V)."""
+    """Fused precompute: a (v_r, w), b (V, w) -> (K, K.*M), each (v_r, V).
+
+    The vocab axis is padded to a multiple of ``v_tile`` and the result
+    sliced back, so arbitrary V works.
+    """
     v_r, w = a.shape
-    v, _ = b.shape
-    grid = (v // v_tile,)
-    return pl.pallas_call(
+    v = b.shape[0]
+    b_p = pad_axis(b, 0, v_tile)
+    v_p = b_p.shape[0]
+    grid = (v_p // v_tile,)
+    k, km = pl.pallas_call(
         functools.partial(_kexp_kernel, lamb=lamb),
         grid=grid,
         in_specs=[
@@ -56,8 +80,48 @@ def cdist_kexp(a: jax.Array, b: jax.Array, *, lamb: float,
             pl.BlockSpec((v_r, v_tile), lambda i: (0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((v_r, v), a.dtype),
-            jax.ShapeDtypeStruct((v_r, v), a.dtype),
+            jax.ShapeDtypeStruct((v_r, v_p), a.dtype),
+            jax.ShapeDtypeStruct((v_r, v_p), a.dtype),
         ],
         interpret=interpret,
-    )(a, b)
+    )(a, b_p)
+    return k[:, :v], km[:, :v]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lamb", "rows_blk", "v_tile", "interpret"))
+def cdist_kexp_rows(a: jax.Array, b: jax.Array, *, lamb: float,
+                    rows_blk: int = 8, v_tile: int = 512,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Row-subset fused precompute: a (m, w) miss rows, b (V, w) -> (K, K.*M).
+
+    The cache-miss path of `core.kcache`: ``m`` is the number of word-ids the
+    batch needs that are not resident, so unlike `cdist_kexp` the row operand
+    cannot be assumed VMEM-resident -- the grid tiles (rows x vocab tiles)
+    and each step reads one (rows_blk, w) row block + one (v_tile, w) vocab
+    block. Rows and vocab are both padded to their tile and sliced back.
+    """
+    m, w = a.shape
+    v = b.shape[0]
+    a_p = pad_axis(a, 0, rows_blk)
+    b_p = pad_axis(b, 0, v_tile)
+    m_p, v_p = a_p.shape[0], b_p.shape[0]
+    grid = (m_p // rows_blk, v_p // v_tile)
+    k, km = pl.pallas_call(
+        functools.partial(_kexp_kernel, lamb=lamb),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_blk, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((v_tile, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rows_blk, v_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((rows_blk, v_tile), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_p, v_p), a.dtype),
+            jax.ShapeDtypeStruct((m_p, v_p), a.dtype),
+        ],
+        interpret=interpret,
+    )(a_p, b_p)
+    return k[:m, :v], km[:m, :v]

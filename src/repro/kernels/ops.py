@@ -16,20 +16,14 @@ import jax.numpy as jnp
 from repro.kernels import cdist as _cdist_kernel
 from repro.kernels import kexp as _kexp_kernel
 from repro.kernels import sddmm_spmm as _sddmm_spmm
+from repro.kernels._pad import pad_axis
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % mult
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
+_pad_to = pad_axis
 
 
 def sddmm_spmm_type1(k_pad: jax.Array, r_sel: jax.Array, u: jax.Array,
@@ -139,24 +133,41 @@ def sddmm_spmm_chunked(k_chunks: jax.Array, r_sel: jax.Array, u: jax.Array,
 
 def cdist(a: jax.Array, b: jax.Array, *, v_tile: int = 512,
           squared: bool = False) -> jax.Array:
-    """Tiled euclidean distance. Pads V to v_tile and w to 128 lanes."""
-    v = b.shape[0]
-    a_p = _pad_to(a, 1, 128)
-    b_p = _pad_to(_pad_to(b, 1, 128), 0, v_tile)
+    """Tiled euclidean distance. Pads v_r to 8 and w to 128 lanes (the kernel
+    itself pads V to v_tile and slices back)."""
     v_r = a.shape[0]
-    a_p = _pad_to(a_p, 0, 8)
+    a_p = _pad_to(_pad_to(a, 1, 128), 0, 8)
+    b_p = _pad_to(b, 1, 128)
     out = _cdist_kernel.cdist(a_p, b_p, v_tile=v_tile, squared=squared,
                               interpret=_interpret())
-    return out[:v_r, :v]
+    return out[:v_r]
 
 
 def cdist_kexp(a: jax.Array, b: jax.Array, *, lamb: float,
                v_tile: int = 512) -> tuple[jax.Array, jax.Array]:
     """Fused precompute -> (K, K.*M), un-padded to (v_r, V)."""
-    v = b.shape[0]
     v_r = a.shape[0]
     a_p = _pad_to(_pad_to(a, 1, 128), 0, 8)
-    b_p = _pad_to(_pad_to(b, 1, 128), 0, v_tile)
+    b_p = _pad_to(b, 1, 128)
     k, km = _kexp_kernel.cdist_kexp(a_p, b_p, lamb=lamb, v_tile=v_tile,
                                     interpret=_interpret())
-    return k[:v_r, :v], km[:v_r, :v]
+    return k[:v_r], km[:v_r]
+
+
+def cdist_kexp_rows(a: jax.Array, b: jax.Array, *, lamb: float,
+                    rows_blk: int = 8, v_tile: int = 512
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Row-subset fused precompute (the cache-miss path of `core.kcache`):
+    a (m, w) miss-row embeddings, b (V, w) -> (K, K.*M), each (m, V).
+
+    Unlike `cdist_kexp` the row operand is not VMEM-resident -- the kernel
+    grids over (row tiles x vocab tiles), so m is unbounded. Pads w to 128
+    lanes here; the kernel pads rows to rows_blk and V to v_tile.
+    """
+    m = a.shape[0]
+    a_p = _pad_to(a, 1, 128)
+    b_p = _pad_to(b, 1, 128)
+    k, km = _kexp_kernel.cdist_kexp_rows(a_p, b_p, lamb=lamb,
+                                         rows_blk=rows_blk, v_tile=v_tile,
+                                         interpret=_interpret())
+    return k[:m], km[:m]

@@ -7,40 +7,72 @@ engine with one psum per iteration.
 Service API
 -----------
   query(r)                  -- one (V,) histogram -> (N,) distances.
-  query_batch(rs, impl=...) -- Q histograms -> (Q, N) in ONE device program:
+  query_batch(rs, impl=...) -- Q histograms -> (Q, N) batched:
       queries are padded to the service's v_r bucket (exact mask-based
       padding, `core.distributed.pad_query_batch`) and admitted in
-      power-of-two Q buckets (bounding retrace count); the batched
-      (Q, v_r, N) engine shares a single ELL gather and a single psum per
-      Sinkhorn iteration across all Q queries (`build_wmd_batch_fn`).
-      Slots added by Q-bucketing carry an all-zero row mask, so they cost
-      flops but contribute nothing and are sliced off before returning.
+      power-of-two Q buckets (bounding retrace count). With the cross-query
+      K cache enabled (``cache_capacity > 0``) the precompute runs through
+      `core.kcache`: word-ids are deduped across the whole batch, only rows
+      not already resident are computed (row-subset fused kexp), and each
+      query's (v_r, Vloc+1) stripe -- zero pad column included, so `pad_k`
+      never runs in the hot path -- is assembled by a single slot-gather
+      feeding the stripes engine (`build_wmd_batch_fn_stripes`); with the
+      cache disabled the legacy single-program engine (precompute fused
+      into the solve, `build_wmd_batch_fn`) runs instead -- faster for a
+      one-shot batch since the split path pays an extra dispatch. Either
+      way the (Q, v_r, N) solve shares a single ELL gather and a single
+      psum per Sinkhorn iteration across all Q queries. Slots added by
+      Q-bucketing carry an all-zero row mask, so they cost flops but
+      contribute nothing and are sliced off before returning.
       ``impl`` ("fused" | "unfused" | "kernel") overrides the service
       default per call (built fns are cached per impl).
-      Admission policy: Q = 1 routes to the sequential path -- the batched
-      engine's (Q, v_r, N) padding/precompute overhead makes a singleton
-      *slower* than the per-query program (speedup 0.96x at Q=1 in the
-      BENCH_query_batch.json artifact).
+      ``use_cache`` routes explicitly: False = the transient
+      (dedup + recompute-everything) stripes path, the cache-off baseline
+      that is *bitwise identical* to the cached path; True = the stripes
+      engine even on a cache-less service (how the bench phase-splits).
+      Admission policy: with the cache disabled, Q = 1 routes to the
+      sequential path -- the batched engine's (Q, v_r, N) padding/precompute
+      overhead makes a singleton *slower* than the per-query program
+      (speedup 0.96x at Q=1 in the BENCH_query_batch.json artifact). With
+      the cache enabled even singletons go through the batched stripes path
+      so they hit (and warm) the row store.
   query_batch_sequential(rs) -- the per-query dispatch loop, kept as the
       correctness oracle and the baseline for bench_query_batch.py.
-  top_k(r, k)               -- nearest-k doc ids + distances.
+  top_k(r, k) / top_k_batch(rs, k) -- nearest-k doc ids + distances
+      (argpartition + local sort: O(N + k log k), not a full argsort).
 
-Perf knobs (constructor fields, forwarded to `build_wmd_batch_fn`):
-  impl       -- default contraction path for query_batch.
-  docs_chunk -- cache-block the batched iteration over doc chunks of this
-                size; at bulk shapes this keeps the (Q, docs_chunk, nnz,
-                v_r) gathered working set cache-resident (see
-                core.sparse_sinkhorn "Batched engine & cache blocking").
-  tol        -- early-exit tolerance: converged queries freeze, the solve
-                stops when all queries converge (0.0 = fixed max_iter).
+Perf knobs (constructor fields):
+  impl           -- default contraction path for query_batch.
+  docs_chunk     -- cache-block the batched iteration over doc chunks of
+                    this size; at bulk shapes this keeps the (Q, docs_chunk,
+                    nnz, v_r) gathered working set cache-resident (see
+                    core.sparse_sinkhorn "Batched engine & cache blocking").
+  tol            -- early-exit tolerance: converged queries freeze, the
+                    solve stops when all queries converge (0.0 = fixed
+                    max_iter).
+  cache_capacity -- resident row slots of the cross-query K/KM cache
+                    (0 = off: every batch recomputes its deduped rows).
+                    Memory: capacity x (V+1) x 2 matrices x 4 B, sharded
+                    over the ``model`` axis like the vocab striping.
+  cache_rows_bucket -- static chunk size of the cache-miss row compute
+                    (one compiled program per bucket; also the cache's
+                    bit-reproducibility guarantee, see core.kcache).
+  kexp_impl      -- "jnp" | "kernel": row-precompute path for cache misses.
 
-`examples/wmd_query_service.py` runs it end-to-end; `launch/serve.py`
-exposes it via --arch sinkhorn-wmd (add --batch-queries for the batched
-path).
+Cache observability: ``cache_stats`` (cumulative hits / misses / evictions /
+hit_rate) and ``last_batch_stats`` (per-call ``precompute_s`` / ``solve_s``
+phase split + that batch's hit_rate -- the fields the bench artifact
+records). The cache re-keys itself if ``cfg.lamb`` changes between calls
+(lambda-invalidation: K rows are keyed by (word_id, lambda)).
+
+`examples/wmd_query_service.py` runs it end-to-end (including a Zipf
+query-stream demo of the cache); `launch/serve.py` exposes it via
+--arch sinkhorn-wmd (add --batch-queries for the batched path).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Sequence
 
 import jax
@@ -49,7 +81,9 @@ import numpy as np
 
 from repro.configs import sinkhorn_wmd as wmd_cfg
 from repro.core import formats, select_query
-from repro.core.distributed import (build_wmd_batch_fn, build_wmd_fn,
+from repro.core.kcache import KCache
+from repro.core.distributed import (build_wmd_batch_fn,
+                                    build_wmd_batch_fn_stripes, build_wmd_fn,
                                     pad_query, pad_query_batch,
                                     shard_wmd_inputs)
 
@@ -71,26 +105,57 @@ class WMDService:
     impl: str = "fused"
     docs_chunk: int | None = None
     tol: float = 0.0
+    cache_capacity: int = 0
+    cache_rows_bucket: int = 128
+    kexp_impl: str = "jnp"
 
     def __post_init__(self):
         model_size = self.mesh.shape["model"]
         self._rb = formats.rebucket_for_vocab_shards(self.ell, model_size)
         self._doc_axes = tuple(a for a in ("pod", "data")
                                if a in self.mesh.axis_names)
-        self._fn = build_wmd_fn(self.mesh, lamb=self.cfg.lamb,
-                                max_iter=self.cfg.max_iter,
-                                doc_axes=self._doc_axes)
+        self._fns: dict[tuple, object] = {}
         self._batch_fns: dict[tuple, object] = {}
+        self._stripe_fns: dict[tuple, object] = {}
         self._vecs_d, self._cols_d, self._vals_d = shard_wmd_inputs(
             self.mesh, self.vecs, self._rb.cols, self._rb.vals,
             doc_axes=self._doc_axes)
+        self._kcache = KCache(self.cache_capacity, self._vecs_d,
+                              self.cfg.lamb, mesh=self.mesh,
+                              rows_bucket=self.cache_rows_bucket,
+                              kexp_impl=self.kexp_impl)
+        self.last_batch_stats: dict = {}
+
+    @property
+    def cache_stats(self):
+        """Cumulative cross-query cache counters (`core.kcache.KCacheStats`)."""
+        return self._kcache.stats
+
+    @property
+    def cache_resident(self) -> int:
+        """Word-id rows currently resident in the cross-query cache."""
+        return self._kcache.resident
+
+    def _single_fn(self):
+        """Per-query solver, keyed by lamb so a mutated cfg.lamb can't serve
+        a stale program (lamb is baked into the jitted fn -- the same reason
+        `_batch_fn` keys on it and the cache re-keys via `ensure_lamb`)."""
+        key = (self.cfg.lamb,)
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = build_wmd_fn(self.mesh, lamb=self.cfg.lamb,
+                              max_iter=self.cfg.max_iter,
+                              doc_axes=self._doc_axes)
+            self._fns[key] = fn
+        return fn
 
     def _batch_fn(self, impl: str, docs_chunk: int | None):
-        """Batched solver for (impl, docs_chunk, tol), built once and cached
-        -- sweeping chunk sizes (bench_query_batch) shares one service and
-        one device-sharded corpus instead of one service per variant. tol is
-        part of the key so mutating svc.tol can't serve a stale solver."""
-        key = (impl, docs_chunk, self.tol)
+        """Single-program batched solver (precompute fused into the device
+        program) -- the engine `query_batch` runs when the cross-query cache
+        is disabled; the cache routes through `_stripe_fn` instead. tol and
+        lamb are part of the key so mutating svc.tol / svc.cfg.lamb can't
+        serve a stale solver."""
+        key = (impl, docs_chunk, self.tol, self.cfg.lamb)
         fn = self._batch_fns.get(key)
         if fn is None:
             fn = build_wmd_batch_fn(self.mesh, lamb=self.cfg.lamb,
@@ -101,41 +166,64 @@ class WMDService:
             self._batch_fns[key] = fn
         return fn
 
+    def _stripe_fn(self, impl: str, docs_chunk: int | None):
+        """Batched solver on cache-assembled stripes, built once per
+        (impl, docs_chunk, tol) -- same caching contract as `_batch_fn`."""
+        key = (impl, docs_chunk, self.tol)
+        fn = self._stripe_fns.get(key)
+        if fn is None:
+            fn = build_wmd_batch_fn_stripes(
+                self.mesh, max_iter=self.cfg.max_iter,
+                doc_axes=self._doc_axes, impl=impl, docs_chunk=docs_chunk,
+                tol=self.tol)
+            self._stripe_fns[key] = fn
+        return fn
+
     def query(self, r: np.ndarray) -> np.ndarray:
         """r: (V,) sparse query histogram -> (N,) distances."""
         sel_idx, r_sel = select_query(r)
         sel_p, r_p, mask = pad_query(sel_idx, r_sel, self.cfg.v_r)
-        wmd = self._fn(jnp.asarray(self.vecs[sel_p]), jnp.asarray(r_p),
-                       jnp.asarray(mask), self._vecs_d, self._cols_d,
-                       self._vals_d)
+        wmd = self._single_fn()(jnp.asarray(self.vecs[sel_p]),
+                                jnp.asarray(r_p), jnp.asarray(mask),
+                                self._vecs_d, self._cols_d, self._vals_d)
         return np.asarray(wmd)
 
     def query_batch(self, rs: Sequence[np.ndarray],
                     impl: str | None = None,
-                    docs_chunk=_UNSET) -> np.ndarray:
+                    docs_chunk=_UNSET,
+                    use_cache: bool | None = None) -> np.ndarray:
         """Multiple queries -> (Q, N) via the batched (Q, v_r, N) engine.
 
-        One ELL gather and one psum per Sinkhorn iteration serve the whole
-        batch; Q is rounded up to a power of two (retrace bound), with the
-        filler slots masked to contribute exactly zero. ``impl`` /
-        ``docs_chunk`` override the service defaults for this call (pass
-        docs_chunk=0 for explicitly unchunked); built fns are cached per
-        (impl, docs_chunk).
+        With the cache enabled, the precompute phase dedups word-ids across
+        the whole batch and computes only rows missing from the cross-query
+        cache; cache-less services run the legacy fused-precompute program.
+        The solve runs one ELL gather and one psum per Sinkhorn iteration
+        for the whole batch either way. Q is rounded up to a power of two
+        (retrace bound), with the filler slots masked to contribute exactly
+        zero. ``impl`` / ``docs_chunk`` override the service defaults for
+        this call (pass docs_chunk=0 for explicitly unchunked);
+        ``use_cache`` overrides the engine routing (False = transient
+        stripes baseline, bitwise identical to the cached path; True =
+        stripes engine even with the cache disabled). Built fns are cached
+        per (impl, docs_chunk).
         """
         if len(rs) == 0:
             return np.zeros((0, self.ell.num_docs), np.float32)
         if (len(rs) == 1 and impl is None and docs_chunk is _UNSET
-                and self.impl == "fused" and self.tol == 0.0):
+                and self.impl == "fused" and self.tol == 0.0
+                and self.cache_capacity == 0):
             # admission policy: a singleton is *slower* batched than
             # sequential (0.96x in BENCH_query_batch.json -- the (Q, v_r, N)
             # precompute/padding overhead has nothing to amortize), so route
             # Q = 1 to the per-query program. Taken only when the sequential
             # path implements the configured engine: an explicit per-call
             # override, a non-fused service impl, or early-exit tol all
-            # bypass it (the sequential program is fused fixed-iteration).
-            # A service-level docs_chunk does NOT bypass -- chunking is
-            # result-identical and the sequential route is the faster
-            # singleton plan either way.
+            # bypass it (the sequential program is fused fixed-iteration),
+            # and so does an enabled cache (singletons should hit and warm
+            # the row store). A service-level docs_chunk does NOT bypass --
+            # chunking is result-identical and the sequential route is the
+            # faster singleton plan either way.
+            self.last_batch_stats = {}     # no stripes phases for this call
             return self.query_batch_sequential(rs)
         sels, rsels = zip(*[select_query(r) for r in rs])
         sel_b, r_b, mask_b = pad_query_batch(sels, rsels, self.cfg.v_r)
@@ -143,7 +231,7 @@ class WMDService:
         q_pad = _next_pow2(q) - q
         if q_pad:
             # admission filler: all-pad queries (mask == 0 everywhere) whose
-            # rows are zeroed in K, so they solve to 0 and are discarded.
+            # stripe rows are zeroed, so they solve to 0 and are discarded.
             sel_b = np.concatenate(
                 [sel_b, np.zeros((q_pad, self.cfg.v_r), sel_b.dtype)])
             r_b = np.concatenate(
@@ -151,18 +239,60 @@ class WMDService:
             mask_b = np.concatenate(
                 [mask_b, np.zeros((q_pad, self.cfg.v_r), mask_b.dtype)])
         dc = self.docs_chunk if docs_chunk is _UNSET else (docs_chunk or None)
-        fn = self._batch_fn(impl or self.impl, dc)
-        wmd = fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
-                 jnp.asarray(mask_b), self._vecs_d, self._cols_d,
-                 self._vals_d)
-        return np.asarray(wmd)[:q]
+        if use_cache is None and self.cache_capacity == 0:
+            # cache disabled and no explicit routing request: the legacy
+            # single-program engine (precompute fused into the solve) is the
+            # faster plan -- the split stripes path pays an extra dispatch
+            # that only the cache can win back. Pass use_cache=True/False to
+            # route a cache-less service through the stripes engine anyway
+            # (e.g. for the bench's phase split).
+            fn = self._batch_fn(impl or self.impl, dc)
+            self.last_batch_stats = {}     # phases not separable in-program
+            wmd = fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
+                     jnp.asarray(mask_b), self._vecs_d, self._cols_d,
+                     self._vals_d)
+            return np.asarray(wmd)[:q]
+        fn = self._stripe_fn(impl or self.impl, dc)
+        self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
+        use = use_cache is not False              # False = transient baseline
+        t0 = time.perf_counter()
+        k_s, km_s, info = self._kcache.stripes_for_batch(sel_b, mask_b,
+                                                         use_cache=use)
+        jax.block_until_ready((k_s, km_s))
+        t_pre = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        wmd = np.asarray(fn(k_s, km_s, jnp.asarray(r_b),
+                            self._cols_d, self._vals_d))[:q]
+        t_solve = time.perf_counter() - t0
+        self.last_batch_stats = {"precompute_s": t_pre, "solve_s": t_solve,
+                                 **info}
+        return wmd
 
     def query_batch_sequential(self, rs: Sequence[np.ndarray]) -> np.ndarray:
         """Per-query dispatch loop -- the oracle/baseline for query_batch."""
         return np.stack([self.query(r) for r in rs])
 
+    @staticmethod
+    def _top_k(d: np.ndarray, k: int) -> np.ndarray:
+        """Indices of the k smallest distances, sorted ascending:
+        argpartition (O(N)) + a local sort of k (O(k log k)) instead of a
+        full O(N log N) argsort."""
+        k = min(k, d.shape[-1])
+        idx = np.argpartition(d, k - 1, axis=-1)[..., :k]
+        order = np.argsort(np.take_along_axis(d, idx, axis=-1), axis=-1)
+        return np.take_along_axis(idx, order, axis=-1)
+
     def top_k(self, r: np.ndarray, k: int = 10) -> tuple[np.ndarray,
                                                          np.ndarray]:
         d = self.query(r)
-        idx = np.argsort(d)[:k]
+        idx = self._top_k(d, k)
         return idx, d[idx]
+
+    def top_k_batch(self, rs: Sequence[np.ndarray], k: int = 10,
+                    **kw) -> tuple[np.ndarray, np.ndarray]:
+        """Batched nearest-k: (Q, k) doc ids + distances via `query_batch`
+        (one device program for all Q solves; ``**kw`` forwards impl /
+        docs_chunk / use_cache)."""
+        d = self.query_batch(rs, **kw)
+        idx = self._top_k(d, k)
+        return idx, np.take_along_axis(d, idx, axis=-1)

@@ -306,7 +306,8 @@ def test_service_q1_routes_to_sequential():
     lone = [data.queries[0]]
     np.testing.assert_array_equal(svc.query_batch(lone),
                                   svc.query_batch_sequential(lone))
-    assert not svc._batch_fns           # shortcut: no batched fn was built
+    # shortcut: no batched fn (legacy or stripes) was built
+    assert not svc._batch_fns and not svc._stripe_fns
     svc_tol, _ = _smoke_service(tol=1e-6)
     got = svc_tol.query_batch(lone)
     assert svc_tol._batch_fns           # early-exit engine actually ran

@@ -109,6 +109,44 @@ def test_cdist_kernel_squared_exact_on_grid():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("n,m", [(8, 77), (13, 100)])
+def test_cdist_pad_to_tile_arbitrary_v(n, m):
+    """V not divisible by v_tile: the kernels pad the vocab axis internally
+    and slice back (the old hard requirement V % v_tile == 0 is gone)."""
+    rng = np.random.default_rng(n * m)
+    a = jnp.asarray(rng.normal(size=(n, 24)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(m, 24)).astype(np.float32))
+    got = ops.cdist(a, b, v_tile=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.cdist(a, b)),
+                               rtol=2e-3, atol=5e-3)
+    k, km = ops.cdist_kexp(a, b, lamb=1.0, v_tile=32)
+    k_ref, km_ref = ref.cdist_kexp(a, b, lamb=1.0)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k_ref),
+                               rtol=5e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(km_ref),
+                               rtol=5e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m_rows,v", [(5, 80), (21, 77), (64, 96)])
+def test_cdist_kexp_rows_matches_full(m_rows, v):
+    """Row-subset fused kexp (the cache-miss path): rows of an arbitrary
+    id subset == the same rows of the full-stripe kernel and the oracle,
+    across non-tile-multiple row counts AND vocab sizes."""
+    rng = np.random.default_rng(m_rows * v)
+    vecs = jnp.asarray(rng.normal(size=(v, 24)).astype(np.float32))
+    ids = jnp.asarray(rng.choice(v, m_rows, replace=False).astype(np.int32))
+    k_rows, km_rows = ops.cdist_kexp_rows(vecs[ids], vecs, lamb=1.0,
+                                          rows_blk=8, v_tile=32)
+    assert k_rows.shape == (m_rows, v)
+    k_ref, km_ref = ref.cdist_kexp(vecs[ids], vecs, lamb=1.0)
+    np.testing.assert_allclose(np.asarray(k_rows), np.asarray(k_ref),
+                               rtol=5e-3, atol=1e-4)
+    # KM inherits the matmul-expansion cancellation of M (~1e-3 absolute,
+    # documented at test_cdist_kernel)
+    np.testing.assert_allclose(np.asarray(km_rows), np.asarray(km_ref),
+                               rtol=5e-3, atol=5e-3)
+
+
 @pytest.mark.parametrize("lamb", [0.5, 1.0, 4.0])
 def test_cdist_kexp_fused(lamb):
     rng = np.random.default_rng(int(lamb * 10))
