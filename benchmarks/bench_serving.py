@@ -1,0 +1,255 @@
+"""Async serving bench: request coalescer vs per-query sequential dispatch,
+with an arrival-rate x coalescing-window sweep.
+
+    PYTHONPATH=src python benchmarks/bench_serving.py [--tiny] \
+        [--windows-ms 2 5 10] [--rate-factors 0.8 2.0] \
+        [--out BENCH_serving.json]
+
+What it measures (all through `serving.loadgen` clients, so latencies are
+client-side submit -> result):
+
+* **sequential baseline** -- a closed loop of one worker calling
+  `WMDService.query` per request: the per-query dispatch ceiling the
+  coalescer must beat (qps_seq).
+* **saturating coalesced throughput** -- a closed loop with
+  2 x max_batch workers over the coalescer: the queue never starves, every
+  batch cuts on *fill*, throughput is the batched-engine ceiling. The
+  headline `speedup_vs_sequential = qps_coalesced_saturating / qps_seq`
+  (>= 1.5x on the 2-core CI box at the low-latency shape, where batching
+  amortizes per-query dispatch + precompute -- see bench_query_batch).
+  Both sides are measured INTERLEAVED over ``rounds`` paired rounds in
+  alternating order (seq-first on even rounds, coalesced-first on odd) and
+  the headline is the MEDIAN OF PER-ROUND RATIOS: shared-box drift on the
+  CI box is multi-x but slowly varying, so it largely cancels inside a
+  pair while medians of independent single shots do not (same reasoning
+  as bench_query_batch's interleaved protocol and run_zipf's alternating
+  order).
+* **rate x window sweep** -- open-loop Poisson arrivals at
+  ``rate_factor * qps_seq`` for each coalescing window: below capacity the
+  window trigger dominates and p50 rides the window; past the sequential
+  ceiling the coalescer keeps serving by cutting bigger batches (mean batch
+  size climbs with rate -- the whole point of coalescing). Each point
+  records throughput, p50/p95/p99, mean batch size, dispatch-trigger
+  counts, and the cache hit rate when the service has one.
+* **bitwise gate** -- before timing, every batch a closed-loop run actually
+  dispatches is recorded at the engine boundary (payloads + result rows)
+  and replayed as a direct `query_batch` call: every row must be bitwise
+  identical (the dispatcher-owns-the-device contract).
+
+Artifact: ``BENCH_serving.json`` (uploaded by bench.yml) with the baseline,
+saturating point, sweep grid and headline speedup. Self-contained on purpose
+(no benchmarks.common import): CI invokes it as a script with only the
+installed `repro` package on the path.
+"""
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+
+
+def run(*, vocab: int = 1024, docs: int = 128, v_r: int = 16,
+        query_words: int = 13, mean_words: float = 8.0,
+        max_batch: int = 16, n_requests: int = 96,
+        n_baseline: int = 24, rounds: int = 5,
+        windows_ms=(2.0, 5.0, 10.0),
+        rate_factors=(0.8, 2.0), cache_capacity: int = 0,
+        zipf_s: float = 1.3, seed: int = 0,
+        out: str | None = None) -> dict:
+    import numpy as np
+    from repro.configs.sinkhorn_wmd import WMDConfig
+    from repro.data import make_corpus, zipf_query_stream
+    from repro.launch.mesh import make_mesh
+    from repro.serving import WMDService, closed_loop, open_loop
+
+    cfg = WMDConfig(name="bench-serving", vocab_size=vocab, embed_dim=64,
+                    num_docs=docs, nnz_max=64, v_r=v_r, lamb=1.0,
+                    max_iter=15)
+    data = make_corpus(vocab_size=vocab, embed_dim=cfg.embed_dim,
+                       num_docs=docs, num_queries=1,
+                       query_words=query_words, mean_words=mean_words,
+                       seed=seed)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
+                     cache_capacity=cache_capacity)
+    stream = zipf_query_stream(vocab_size=vocab, query_words=query_words,
+                               s=zipf_s, seed=seed + 1)
+    qs = list(itertools.islice(stream, n_requests))
+
+    # warm the per-query program the sequential baseline runs; the pow2 Q
+    # buckets are warmed by the bitwise-gate coalescer below (co.warm)
+    svc.query(qs[0])
+
+    results = {"vocab": vocab, "docs": docs, "v_r": v_r,
+               "query_words": query_words, "max_batch": max_batch,
+               "n_requests": n_requests, "cache_capacity": cache_capacity,
+               "zipf_s": zipf_s, "max_iter": cfg.max_iter,
+               "note": ("speedup_vs_sequential = saturating closed-loop "
+                        "coalesced throughput / single-worker per-query "
+                        "dispatch throughput. Sweep rates are multiples of "
+                        "the measured sequential ceiling so the grid "
+                        "adapts to the box. bitwise_checked: every "
+                        "dispatched batch recorded at the engine boundary "
+                        "and replayed as a direct query_batch, "
+                        "array_equal.")}
+
+    # -- bitwise gate: coalesced == direct query_batch of the same batches.
+    # Record each dispatched (payloads, rows) pair at the engine boundary
+    # and replay it directly afterwards: concurrent closed-loop submitters
+    # can reach the coalescer in a different order than they popped queries,
+    # so the batch compositions must be captured, not reconstructed from
+    # request seq numbers.
+    dispatched = []
+    orig_query_batch = svc.query_batch
+
+    def recording(rs, **kw):
+        rows = orig_query_batch(rs, **kw)
+        dispatched.append(([np.array(r) for r in rs], np.asarray(rows)))
+        return rows
+
+    with svc.async_service(window_ms=2.0, max_batch=max_batch) as co:
+        co.warm(qs)       # compile every pow2 Q bucket (outside recording)
+        svc.query_batch = recording
+        try:
+            closed_loop(co.submit, qs[:4 * max_batch],
+                        concurrency=max_batch)
+        finally:
+            svc.query_batch = orig_query_batch
+    for k, (rs, rows) in enumerate(dispatched):
+        np.testing.assert_array_equal(
+            np.asarray(svc.query_batch(rs)), rows,
+            err_msg=f"coalesced dispatch {k} != direct query_batch")
+    results["bitwise_checked"] = True
+    results["bitwise_dispatches"] = len(dispatched)
+    print(f"# bitwise gate: {len(dispatched)} coalesced dispatches == "
+          f"direct query_batch (array_equal)")
+
+    # -- sequential baseline vs saturating coalesced: paired rounds in
+    # alternating order, headline = median of per-round ratios (see module
+    # docstring -- slowly-varying shared-box drift cancels inside a pair).
+    med = lambda xs: sorted(xs)[len(xs) // 2]   # noqa: E731
+    seq_qps, sat_qps, seq_runs, sat_runs = [], [], [], []
+    run_seq = lambda: closed_loop(lambda r: svc.query(r),   # noqa: E731
+                                  qs[:n_baseline], concurrency=1)
+    # at saturation the window is a throughput knob, not a latency one: a
+    # wide window lets every batch reach fill (mean_batch -> max_batch)
+    # while the queue hides the wait -- measured on the CI box, 10 ms vs
+    # 2 ms is mean_batch 7.8-8.0 vs ~6.5 and ~1.4x the throughput
+    sat_kw = dict(window_ms=max(*windows_ms, 10.0), max_batch=max_batch,
+                  max_queue=4 * max_batch)
+    with svc.async_service(**sat_kw) as co_warm:
+        closed_loop(co_warm.submit, qs,   # warm the odd Q buckets on a
+                    concurrency=2 * max_batch)   # throwaway coalescer so
+    with svc.async_service(**sat_kw) as co:      # measured stats are clean
+        run_sat = lambda: closed_loop(co.submit, qs,        # noqa: E731
+                                      concurrency=2 * max_batch)
+        for i in range(rounds):
+            if i % 2 == 0:
+                seq, sat = run_seq(), run_sat()
+            else:
+                sat, seq = run_sat(), run_seq()
+            seq_qps.append(seq.throughput_qps)
+            sat_qps.append(sat.throughput_qps)
+            seq_runs.append(seq)
+            sat_runs.append(sat)
+        sat_stats = co.stats()
+    ratios = [s / q for s, q in zip(sat_qps, seq_qps)]
+    qps_seq, qps_sat = med(seq_qps), med(sat_qps)
+    seq = seq_runs[seq_qps.index(qps_seq)]        # both summaries from the
+    sat = sat_runs[sat_qps.index(qps_sat)]        # median-throughput round
+    results["sequential"] = {**seq.summary(), "qps_rounds": seq_qps,
+                             "throughput_qps": qps_seq}
+    results["saturating"] = {**sat.summary(), "qps_rounds": sat_qps,
+                             "throughput_qps": qps_sat,
+                             "mean_batch_size": sat_stats.mean_batch_size,
+                             "batch_size_hist": sat_stats.batch_size_hist,
+                             "dispatch_fill": sat_stats.dispatch_fill,
+                             "dispatch_window": sat_stats.dispatch_window,
+                             "hit_rate": sat_stats.hit_rate}
+    results["speedup_rounds"] = ratios
+    results["speedup_vs_sequential"] = med(ratios)
+    print(f"serving/seq,{1e6 / qps_seq:.1f},qps={qps_seq:.1f}")
+    print(f"serving/saturating,{1e6 / qps_sat:.1f},"
+          f"qps={qps_sat:.1f}:"
+          f"mean_batch={sat_stats.mean_batch_size:.1f}:"
+          f"speedup={results['speedup_vs_sequential']:.2f}x:"
+          f"rounds={[round(r, 2) for r in ratios]}")
+
+    # -- arrival rate x window sweep (open-loop Poisson)
+    results["sweep"] = []
+    for window_ms in windows_ms:
+        for factor in rate_factors:
+            rate = factor * qps_seq
+            with svc.async_service(window_ms=window_ms,
+                                   max_batch=max_batch,
+                                   max_queue=8 * max_batch) as co:
+                res = open_loop(co.submit, iter(qs), rate_qps=rate,
+                                seed=seed)
+                st = co.stats()
+            point = {"window_ms": window_ms, "rate_factor": factor,
+                     **res.summary(),
+                     "mean_batch_size": st.mean_batch_size,
+                     "batch_size_hist": st.batch_size_hist,
+                     "dispatch_fill": st.dispatch_fill,
+                     "dispatch_window": st.dispatch_window,
+                     "dispatch_deadline": st.dispatch_deadline,
+                     "dispatch_drain": st.dispatch_drain,
+                     "hit_rate": st.hit_rate}
+            results["sweep"].append(point)
+            print(f"serving/w{window_ms:g}r{factor:g},"
+                  f"{1e6 / max(res.throughput_qps, 1e-9):.1f},"
+                  f"qps={res.throughput_qps:.1f}:"
+                  f"p50={res.percentile_ms(50):.1f}ms:"
+                  f"p99={res.percentile_ms(99):.1f}ms:"
+                  f"mean_batch={st.mean_batch_size:.1f}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {out}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--docs", type=int, default=128)
+    ap.add_argument("--v-r", type=int, default=16)
+    ap.add_argument("--query-words", type=int, default=13)
+    ap.add_argument("--mean-words", type=float, default=8.0)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--windows-ms", type=float, nargs="+",
+                    default=[2.0, 5.0, 10.0])
+    ap.add_argument("--rate-factors", type=float, nargs="+",
+                    default=[0.8, 2.0],
+                    help="open-loop arrival rates as multiples of the "
+                         "measured sequential qps ceiling")
+    ap.add_argument("--cache-capacity", type=int, default=0,
+                    help="cross-query K-cache rows (adds hit_rate "
+                         "passthrough to every point)")
+    ap.add_argument("--zipf-s", type=float, default=1.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape (small corpus, max_batch 8, "
+                         "short sweep)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    if args.tiny:
+        run(vocab=512, docs=64, max_batch=8, n_requests=64, n_baseline=16,
+            rounds=5, windows_ms=(2.0, 5.0), rate_factors=(0.8, 2.0),
+            cache_capacity=args.cache_capacity, seed=args.seed,
+            out=args.out)
+    else:
+        run(vocab=args.vocab, docs=args.docs, v_r=args.v_r,
+            query_words=args.query_words, mean_words=args.mean_words,
+            max_batch=args.max_batch,
+            n_requests=args.requests, rounds=args.rounds,
+            windows_ms=tuple(args.windows_ms),
+            rate_factors=tuple(args.rate_factors),
+            cache_capacity=args.cache_capacity, zipf_s=args.zipf_s,
+            seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

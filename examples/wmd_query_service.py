@@ -3,6 +3,8 @@
     PYTHONPATH=src python examples/wmd_query_service.py [--devices 8]
     PYTHONPATH=src python examples/wmd_query_service.py \
         --zipf-stream --cache-capacity 1024
+    PYTHONPATH=src python examples/wmd_query_service.py \
+        --coalesce --clients 8
 
 Loads a corpus once onto the mesh (vocab-striped K + doc-sharded ELL),
 then serves a stream of queries (bucketed by padded v_r, one psum per
@@ -14,6 +16,15 @@ batches drawn from `repro.data.zipf_query_stream` repeat word ids across
 queries, so after a few batches most precompute rows are already resident
 (`core.kcache`) and `query_batch` only computes the misses -- watch the
 per-batch hit rate climb and the precompute phase shrink.
+
+--coalesce demos the async admission layer: ``--clients`` concurrent
+closed-loop clients each submit single queries to a
+`serving.coalescer.QueryCoalescer` (via `svc.async_service`) and the
+coalescer micro-batches them into full `query_batch` dispatches -- the
+batch-size histogram and client-side latency percentiles it prints are the
+whole story (fill-triggered batches under load, window flushes at the
+tail). Combine with --cache-capacity to watch the cross-query K cache's
+hit rate ride along in the same report.
 """
 import argparse
 import os
@@ -36,8 +47,17 @@ def main():
                          "the cross-query K cache and print per-batch "
                          "hit rate + phase split")
     ap.add_argument("--cache-capacity", type=int, default=1024,
-                    help="resident K/K.M rows for --zipf-stream")
+                    help="resident K/K.M rows for --zipf-stream and "
+                         "--coalesce")
     ap.add_argument("--stream-batches", type=int, default=8)
+    ap.add_argument("--coalesce", action="store_true",
+                    help="fire concurrent single-query clients at the "
+                         "async coalescer and print the batch-size "
+                         "histogram + latency percentiles")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="concurrent closed-loop clients for --coalesce")
+    ap.add_argument("--requests-per-client", type=int, default=12)
+    ap.add_argument("--coalesce-window-ms", type=float, default=5.0)
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -66,9 +86,43 @@ def main():
     svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
                      docs_chunk=args.docs_chunk or None,
                      cache_capacity=(args.cache_capacity
-                                     if args.zipf_stream else 0))
+                                     if args.zipf_stream or args.coalesce
+                                     else 0))
     print(f"corpus loaded+sharded in {time.perf_counter() - t0:.2f}s "
           f"(nnz={data.nnz})")
+
+    if args.coalesce:
+        # concurrent clients each submit ONE query at a time; the coalescer
+        # turns that stream into full (Q, v_r, N) dispatches -- mean batch
+        # size is the amortization the paper's batching wins come from
+        import itertools
+        from repro.data import zipf_query_stream
+        from repro.serving import closed_loop
+        stream = zipf_query_stream(vocab_size=cfg.vocab_size,
+                                   query_words=13, s=1.3, seed=0)
+        qs = list(itertools.islice(
+            stream, args.clients * args.requests_per_client))
+        max_batch = max(args.clients, 2)
+        with svc.async_service(window_ms=args.coalesce_window_ms,
+                               max_batch=max_batch,
+                               max_queue=4 * max_batch) as co:
+            co.warm(qs)              # compile each pow2 bucket up front
+            res = closed_loop(co.submit, qs, concurrency=args.clients)
+            st = co.stats()
+        print(f"coalesce: {args.clients} clients x "
+              f"{args.requests_per_client} requests, "
+              f"window={args.coalesce_window_ms:g} ms -> "
+              f"{res.throughput_qps:.1f} q/s, "
+              f"mean batch {st.mean_batch_size:.1f}")
+        print(f"  dispatches={st.dispatches} (fill={st.dispatch_fill} "
+              f"window={st.dispatch_window} drain={st.dispatch_drain}) "
+              f"batch-size hist={st.batch_size_hist}")
+        print(f"  client latency ms: p50={res.percentile_ms(50):.1f} "
+              f"p95={res.percentile_ms(95):.1f} "
+              f"p99={res.percentile_ms(99):.1f}"
+              + (f"  cache hit_rate={st.hit_rate:.2f}"
+                 if st.hit_rate is not None else ""))
+        return
 
     if args.zipf_stream:
         # realistic skewed workload in one line: successive batches share

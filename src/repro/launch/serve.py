@@ -3,6 +3,15 @@
 ``python -m repro.launch.serve --arch sinkhorn-wmd`` serves WMD queries
 (the paper's workload); any other --arch runs prefill + a short batched
 decode loop on the smoke config (real configs need real hardware).
+
+``--coalesce-window-ms W`` (W > 0) turns the one-shot WMD batch path into a
+real serving loop: a `serving.coalescer.QueryCoalescer` in front of the
+service micro-batches an asynchronous stream of Zipf queries (open-loop
+Poisson arrivals at ``--rate-qps``, or back-to-back submits when 0), with
+``--max-queue`` backpressure and optional per-request ``--deadline-ms``
+budgets. Ctrl-C is safe: the loop drains the queue and in-flight batch
+before exiting, and the `ServingStats` report (batch-size histogram,
+dispatch triggers, latency percentiles) always prints on the way out.
 """
 import argparse
 import os
@@ -29,6 +38,24 @@ def main():
     ap.add_argument("--tol", type=float, default=0.0,
                     help="sinkhorn-wmd: early-exit tolerance for the "
                          "batched solve (0 = fixed max_iter)")
+    ap.add_argument("--coalesce-window-ms", type=float, default=0.0,
+                    help="sinkhorn-wmd: > 0 runs the async serving loop -- "
+                         "a QueryCoalescer micro-batches a query stream "
+                         "with this coalescing window (ms)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="serving loop: Q bucket that cuts a batch on fill "
+                         "(rounded up to a power of two)")
+    ap.add_argument("--max-queue", type=int, default=256,
+                    help="serving loop: admission-queue bound (blocking "
+                         "backpressure when full; 0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="serving loop: per-request deadline budget "
+                         "(0 = none); deadlines pull dispatch earlier")
+    ap.add_argument("--rate-qps", type=float, default=0.0,
+                    help="serving loop: open-loop Poisson arrival rate "
+                         "(0 = submit back-to-back, saturating)")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="serving loop: total queries to serve")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     args = ap.parse_args()
@@ -65,6 +92,9 @@ def main():
                          impl=args.impl,
                          docs_chunk=args.docs_chunk or None,
                          tol=args.tol)
+        if args.coalesce_window_ms > 0:
+            _serve_wmd_loop(svc, cfg, args)
+            return
         if args.batch_queries:
             svc.query_batch(data.queries)          # compile outside timing
             t0 = time.perf_counter()
@@ -121,6 +151,69 @@ def main():
         dt = time.perf_counter() - t0
     print(f"[serve] {args.decode_steps} decode steps: {dt * 1e3:.1f} ms "
           f"({dt / args.decode_steps * 1e3:.2f} ms/tok)")
+
+
+def _serve_wmd_loop(svc, cfg, args):
+    """Async serving loop: Zipf stream -> QueryCoalescer -> query_batch.
+
+    SIGINT-safe by construction: KeyboardInterrupt only breaks the submit
+    loop; the ``finally`` block still drains the queue + in-flight batch
+    (shutdown-with-drain) and prints the ServingStats report, so every
+    accepted request is answered before the process exits.
+    """
+    import time
+    import numpy as np
+    from repro.data import zipf_query_stream
+    from repro.serving import open_loop
+
+    stream = zipf_query_stream(vocab_size=cfg.vocab_size,
+                               query_words=min(cfg.v_r - 1, 13), seed=0)
+    qs = [next(stream) for _ in range(args.requests)]
+    co = svc.async_service(window_ms=args.coalesce_window_ms,
+                           max_batch=args.max_batch,
+                           max_queue=args.max_queue,
+                           default_deadline_ms=args.deadline_ms or None)
+    co.warm(qs)                # compile every pow2 bucket outside serving
+    print(f"[serve-wmd] serving loop: {args.requests} zipf queries, "
+          f"window={args.coalesce_window_ms:g} ms "
+          f"max_batch={co.max_batch} max_queue={args.max_queue} "
+          f"rate={'saturating' if args.rate_qps <= 0 else args.rate_qps} "
+          f"(Ctrl-C drains and reports)")
+    futs = []
+    t0 = time.perf_counter()
+    try:
+        if args.rate_qps > 0:
+            # loadgen's open loop: absolute seeded Poisson schedule, so slow
+            # submits (e.g. blocking backpressure) make the driver catch up
+            # instead of silently lowering the offered rate
+            open_loop(co.submit, qs, rate_qps=args.rate_qps, seed=0)
+        else:
+            futs = [co.submit(r) for r in qs]      # saturating back-to-back
+        co.drain()
+    except KeyboardInterrupt:
+        print("\n[serve-wmd] SIGINT: draining queued + in-flight requests")
+    finally:
+        co.shutdown(drain=True)
+        dt = time.perf_counter() - t0
+        st = co.stats()
+        if futs and futs[0].exception() is None:
+            d = futs[0].result()
+            idx = np.argsort(d)[:5]
+            print(f"[serve-wmd] sample query 0: top5 docs {idx.tolist()} "
+                  f"d={np.round(d[idx], 3).tolist()}")
+        print(f"[serve-wmd] served {st.completed}/{st.submitted} in "
+              f"{dt:.2f}s ({st.completed / max(dt, 1e-9):.1f} q/s), "
+              f"mean batch {st.mean_batch_size:.1f}")
+        print(f"[serve-wmd] dispatches={st.dispatches} "
+              f"(fill={st.dispatch_fill} window={st.dispatch_window} "
+              f"deadline={st.dispatch_deadline} drain={st.dispatch_drain}) "
+              f"hist={st.batch_size_hist}")
+        print(f"[serve-wmd] latency ms: mean={st.latency_ms_mean:.1f} "
+              f"p50={st.latency_ms_p50:.1f} p95={st.latency_ms_p95:.1f} "
+              f"p99={st.latency_ms_p99:.1f} "
+              f"deadline_misses={st.deadline_misses}"
+              + (f" hit_rate={st.hit_rate:.2f}"
+                 if st.hit_rate is not None else ""))
 
 
 if __name__ == "__main__":

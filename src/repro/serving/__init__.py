@@ -1,5 +1,11 @@
-"""Serving substrate: sharded prefill/decode + the WMD query service."""
+"""Serving substrate: sharded prefill/decode, the WMD query service, and the
+async admission layer (request coalescer + load generators)."""
+from repro.serving.coalescer import (CoalescerClosedError, QueryCoalescer,
+                                     QueueFullError, ServingStats)
+from repro.serving.loadgen import LoadgenResult, closed_loop, open_loop
 from repro.serving.serve_step import build_serve_fns
 from repro.serving.wmd_service import WMDService
 
-__all__ = ["build_serve_fns", "WMDService"]
+__all__ = ["build_serve_fns", "WMDService", "QueryCoalescer",
+           "ServingStats", "QueueFullError", "CoalescerClosedError",
+           "LoadgenResult", "open_loop", "closed_loop"]

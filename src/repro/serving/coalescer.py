@@ -1,0 +1,503 @@
+"""Async request coalescer: turns a stream of single WMD queries into full
+cache-friendly batches for the (Q, v_r, N) engine.
+
+The paper's speedup is batch amortization: one fused SDDMM-SpMM program (one
+ELL gather, one psum per Sinkhorn iteration) serves every query in the batch,
+so the engine only reaches peak when it is fed full batches. `WMDService`
+solves whatever one `query_batch` call brings; this module supplies the
+missing admission layer for an *asynchronous* workload -- independent clients
+submitting one query at a time ("heavy traffic from millions of users").
+
+Serving architecture (queue -> dispatcher -> engine)
+----------------------------------------------------
+::
+
+    clients                 QueryCoalescer                       WMDService
+    submit(r) ---> [priority lane | admission queue] --+
+    submit(r) ----------------^                        |  dispatcher thread
+    submit_many -------------^                         +-> query_batch(batch)
+       ...                                                  |  (one device
+    Future <---- set_result(row i of the batch result) <----+   program)
+
+* **Admission queue** -- bounded (``max_queue``) FIFO of pending requests,
+  plus an optional priority lane (``submit(..., priority=1)``) drained first
+  at batch-formation time. When the queue is full, ``backpressure`` picks the
+  policy: ``"block"`` parks the submitter until space frees (optional
+  ``timeout``), ``"reject"`` raises `QueueFullError` immediately.
+* **Dispatcher thread** -- the only thread that touches the device, so
+  coalesced serving keeps the engine's determinism: each dispatched batch is
+  one plain ``svc.query_batch(rs)`` call, and every request's result row is
+  **bitwise identical** to a direct ``query_batch`` of the same queries in
+  the same order (asserted by tests/test_coalescer.py via `batch_log`
+  oracle replay, cache on and off).
+* **Dispatch triggers** -- a batch is cut when the first of these fires
+  (per-dispatch counts are in `ServingStats`):
+    - *fill*:     the ``max_batch`` Q bucket is full (``max_batch`` is
+                  rounded up to a power of two to match the service's
+                  pow2 admission buckets -- a coalescer batch never
+                  straddles two bucket retraces);
+    - *window*:   the oldest queued request has waited ``window_ms``
+                  (2-10 ms spans the sweet spot on the bench box:
+                  long enough to fill buckets at load, short enough to
+                  stay invisible next to a solve);
+    - *deadline*: waiting any longer would violate the earliest queued
+                  request's deadline budget, i.e.
+                  ``now + service_estimate >= min(deadline)`` where
+                  ``service_estimate`` is an EWMA of recent dispatch wall
+                  times (first dispatches include compile time, so warm the
+                  service before relying on tight deadlines);
+    - *drain*:    `drain()` and shutdown flush whatever is queued
+                  immediately (no waiting out the window).
+* **Cancellation** -- a client may ``Future.cancel()`` a request that is
+  still queued; it is discarded at batch-formation time (never dispatched,
+  counted in ``ServingStats.cancelled``). Requests that survive the cut are
+  marked running, so a late cancel can never race the result fan-out.
+* **Deadlines** -- ``submit(..., deadline_ms=...)`` (or the constructor's
+  ``default_deadline_ms``) sets a per-request budget measured from submit
+  time. Deadlines pull dispatch *earlier*; a request that still finishes
+  past its deadline is served anyway and counted in
+  ``ServingStats.deadline_misses`` (serving late beats dropping work; a
+  dropping policy belongs in the client).
+* **Shutdown** -- `drain()` blocks until the queue and in-flight batch are
+  empty (coalescer stays open); `shutdown(drain=True)` closes admission,
+  flushes, and joins the thread; `shutdown(drain=False)` fails pending
+  futures with `CoalescerClosedError`. The context-manager form
+  (``with svc.async_service() as co:``) is shutdown-with-drain, which is
+  what makes the serve loop SIGINT-safe.
+
+Observability: `stats()` returns a `ServingStats` snapshot -- queue depth,
+batch-size histogram, per-trigger dispatch counts, p50/p95/p99 request
+latency, and the cross-query cache hit rate passed through from the
+service's ``last_batch_stats``. `batch_log` keeps the request-id composition
+of recent dispatches: the replay oracle for the bitwise contract and the
+provenance record for tail-latency debugging.
+
+`loadgen.py` drives this layer (open-loop Poisson / closed-loop workers)
+and `benchmarks/bench_serving.py` sweeps arrival rate x window into
+``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import threading
+import time
+from concurrent.futures import Future
+from typing import Sequence
+
+import numpy as np
+
+
+class QueueFullError(RuntimeError):
+    """Admission queue at max_queue and backpressure policy gave up."""
+
+
+class CoalescerClosedError(RuntimeError):
+    """submit() after shutdown, or a pending request failed by a no-drain
+    shutdown."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingStats:
+    """Point-in-time snapshot of the coalescer (all counters cumulative)."""
+    queue_depth: int              # requests waiting (both lanes)
+    in_flight: int                # requests inside the current dispatch
+    submitted: int
+    completed: int
+    rejected: int                 # backpressure rejections (QueueFullError)
+    failed: int                   # requests whose dispatch raised
+    cancelled: int                # futures cancelled by clients while queued
+    deadline_misses: int          # served, but past their deadline
+    dispatches: int
+    dispatch_fill: int            # per-trigger dispatch counts
+    dispatch_window: int
+    dispatch_deadline: int
+    dispatch_drain: int
+    batch_size_hist: dict[int, int]
+    mean_batch_size: float
+    latency_ms_mean: float        # request latency = submit -> result set
+    latency_ms_p50: float
+    latency_ms_p95: float
+    latency_ms_p99: float
+    hit_rate: float | None        # mean per-dispatch cache hit rate
+    service_estimate_ms: float    # EWMA dispatch wall time (deadline trigger)
+
+
+@dataclasses.dataclass
+class _Request:
+    seq: int
+    r: np.ndarray
+    future: Future
+    t_submit: float
+    deadline: float | None        # absolute monotonic time, or None
+    priority: int
+    popped: bool = False          # left the queue (dispatched or discarded);
+                                  # lazily expires stale deadline-heap entries
+
+
+def _next_pow2(q: int) -> int:
+    return 1 << (q - 1).bit_length()
+
+
+# scheduling slack subtracted from deadline fire times on top of the
+# service-time EWMA: covers dispatcher wakeup + batch pop + result fan-out,
+# which the EWMA (pure query_batch wall time) does not see
+_DEADLINE_MARGIN_S = 1e-3
+
+
+class QueryCoalescer:
+    """Thread-safe admission queue + dispatcher in front of a `WMDService`.
+
+    See the module docstring for the architecture. ``svc`` only needs a
+    ``query_batch(list[np.ndarray]) -> (Q, N)`` method and (optionally) a
+    ``last_batch_stats`` dict -- the coalescer is engine-agnostic by design.
+
+    Args:
+      svc:            the service whose ``query_batch`` dispatches run on.
+      window_ms:      coalescing window measured from the oldest queued
+                      request (trigger *window*).
+      max_batch:      Q bucket that cuts a batch on fill; rounded up to a
+                      power of two (the service's admission granularity).
+      max_queue:      bound on queued requests (both lanes); 0 = unbounded.
+      backpressure:   "block" | "reject" when the queue is full.
+      default_deadline_ms: deadline applied to submits that don't pass one
+                      (None = no deadline).
+      batch_log_size: dispatched-batch compositions kept for oracle replay /
+                      debugging (`batch_log`).
+      latency_window: completed-request latencies kept for the percentile
+                      snapshot (bounded so a long-lived server can't grow
+                      without bound; percentiles are over this window, and
+                      stats() copies it under the lock -- the default keeps
+                      that copy well under the coalescing-window scale).
+    """
+
+    def __init__(self, svc, *, window_ms: float = 5.0, max_batch: int = 16,
+                 max_queue: int = 256, backpressure: str = "block",
+                 default_deadline_ms: float | None = None,
+                 batch_log_size: int = 4096, latency_window: int = 10_000):
+        if backpressure not in ("block", "reject"):
+            raise ValueError(f"backpressure must be block|reject, "
+                             f"got {backpressure!r}")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.svc = svc
+        self.window_s = window_ms / 1e3
+        self.max_batch = _next_pow2(max_batch)
+        self.max_queue = max_queue
+        self.backpressure = backpressure
+        self.default_deadline_s = (None if default_deadline_ms is None
+                                   else default_deadline_ms / 1e3)
+
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)   # dispatcher waits
+        self._space = threading.Condition(self._lock)  # blocked submitters
+        self._idle = threading.Condition(self._lock)   # drain() waiters
+        self._lo: collections.deque[_Request] = collections.deque()
+        self._hi: collections.deque[_Request] = collections.deque()
+        self._closed = False
+        self._draining = 0            # active drain() calls force flushes
+        self._seq = 0
+        self._in_flight = 0
+
+        # counters (under _lock)
+        self._submitted = 0
+        self._completed = 0
+        self._rejected = 0
+        self._failed = 0
+        self._cancelled = 0
+        self._deadline_misses = 0
+        # lazy min-heap of (deadline, seq, request): queued deadlines without
+        # an O(queue) scan per wakeup; entries whose request already left the
+        # queue (popped) are expired at read time
+        self._dl_heap: list[tuple[float, int, _Request]] = []
+        self._dispatch_counts = {"fill": 0, "window": 0, "deadline": 0,
+                                 "drain": 0}
+        self._batch_hist: collections.Counter = collections.Counter()
+        self._latencies = collections.deque(maxlen=latency_window)
+        self._hit_rate_sum = 0.0
+        self._hit_rate_n = 0
+        self._service_est_s = 0.0
+        self.batch_log: collections.deque[tuple[int, ...]] = \
+            collections.deque(maxlen=batch_log_size)
+
+        self._thread = threading.Thread(target=self._run,
+                                        name="wmd-coalescer", daemon=True)
+        self._thread.start()
+
+    # -- client side ------------------------------------------------------
+
+    def submit(self, r: np.ndarray, *, deadline_ms: float | None = None,
+               priority: int = 0, timeout: float | None = None) -> Future:
+        """Enqueue one (V,) query histogram; returns a Future of its (N,)
+        distance row. Thread-safe. ``deadline_ms`` overrides the default
+        deadline; ``priority > 0`` routes via the priority lane; ``timeout``
+        bounds a *blocking* backpressure wait (seconds)."""
+        with self._lock:
+            if self._closed:
+                raise CoalescerClosedError("coalescer is shut down")
+            if self.max_queue:
+                deadline_wait = (None if timeout is None
+                                 else time.monotonic() + timeout)
+                while self._depth_locked() >= self.max_queue:
+                    if self.backpressure == "reject":
+                        self._rejected += 1
+                        raise QueueFullError(
+                            f"admission queue full ({self.max_queue})")
+                    remaining = (None if deadline_wait is None
+                                 else deadline_wait - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        self._rejected += 1
+                        raise QueueFullError(
+                            f"blocked submit timed out after {timeout}s")
+                    self._space.wait(timeout=remaining)
+                    if self._closed:
+                        raise CoalescerClosedError("coalescer is shut down")
+            now = time.monotonic()
+            dl_s = (self.default_deadline_s if deadline_ms is None
+                    else deadline_ms / 1e3)
+            req = _Request(seq=self._seq, r=r, future=Future(), t_submit=now,
+                           deadline=None if dl_s is None else now + dl_s,
+                           priority=priority)
+            self._seq += 1
+            (self._hi if priority > 0 else self._lo).append(req)
+            if req.deadline is not None:
+                heapq.heappush(self._dl_heap, (req.deadline, req.seq, req))
+            self._submitted += 1
+            self._work.notify()
+            return req.future
+
+    def submit_many(self, rs: Sequence[np.ndarray], **kw) -> list[Future]:
+        """Enqueue several queries in order (same kwargs as `submit`)."""
+        return [self.submit(r, **kw) for r in rs]
+
+    def warm(self, qs: Sequence[np.ndarray]) -> None:
+        """Compile every pow2 Q bucket this coalescer can cut by running
+        ``svc.query_batch`` directly on the caller's thread -- call once
+        before serving so no live dispatch pays compile time (first
+        dispatches otherwise include it, which also skews the deadline
+        trigger's service-time EWMA)."""
+        b = 1
+        while qs and b <= self.max_batch:
+            self.svc.query_batch(list(qs[:b]))
+            if b >= len(qs):        # shorter qs can't fill bigger buckets
+                break
+            b *= 2
+
+    # -- lifecycle --------------------------------------------------------
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Flush the queue and block until it and the in-flight batch are
+        empty (the coalescer stays open). Queued requests are dispatched
+        immediately (*drain* trigger) rather than waiting out the coalescing
+        window. Raises TimeoutError on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            self._draining += 1
+            self._work.notify()
+            try:
+                while self._depth_locked() or self._in_flight:
+                    remaining = (None if deadline is None
+                                 else deadline - time.monotonic())
+                    if remaining is not None and remaining <= 0:
+                        raise TimeoutError("drain timed out")
+                    self._idle.wait(timeout=remaining)
+            finally:
+                self._draining -= 1
+
+    def shutdown(self, *, drain: bool = True,
+                 timeout: float | None = None) -> None:
+        """Close admission and stop the dispatcher (idempotent). With
+        ``drain`` the queue is flushed first; without, pending requests fail
+        with `CoalescerClosedError`."""
+        with self._lock:
+            if not self._closed:
+                self._closed = True
+                if not drain:
+                    for req in list(self._hi) + list(self._lo):
+                        req.popped = True
+                        if req.future.set_running_or_notify_cancel():
+                            req.future.set_exception(
+                                CoalescerClosedError("shutdown(drain=False)"))
+                            self._failed += 1
+                        else:                  # client already cancelled it
+                            self._cancelled += 1
+                    self._hi.clear()
+                    self._lo.clear()
+                self._work.notify_all()
+                self._space.notify_all()
+                self._idle.notify_all()
+        self._thread.join(timeout=timeout)
+
+    def __enter__(self) -> "QueryCoalescer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown(drain=True)
+
+    # -- observability ----------------------------------------------------
+
+    def stats(self) -> ServingStats:
+        """Consistent snapshot of counters + latency percentiles. Only the
+        raw state is copied under the lock; the percentile math (O(latency
+        window)) runs after release so a monitoring poll never stalls
+        submitters or the dispatcher."""
+        with self._lock:
+            scalars = dict(
+                queue_depth=self._depth_locked(),
+                in_flight=self._in_flight,
+                submitted=self._submitted,
+                completed=self._completed,
+                rejected=self._rejected,
+                failed=self._failed,
+                cancelled=self._cancelled,
+                deadline_misses=self._deadline_misses)
+            counts = dict(self._dispatch_counts)
+            hist = dict(sorted(self._batch_hist.items()))
+            lat_snap = list(self._latencies)
+            hit_rate = (self._hit_rate_sum / self._hit_rate_n
+                        if self._hit_rate_n else None)
+            est_ms = self._service_est_s * 1e3
+        lat = np.asarray(lat_snap, np.float64) * 1e3
+        n_disp = sum(counts.values())
+        total_in_batches = sum(q * c for q, c in hist.items())
+        pct = (lambda p: float(np.percentile(lat, p))) if lat.size \
+            else (lambda p: 0.0)
+        return ServingStats(
+            **scalars,
+            dispatches=n_disp,
+            dispatch_fill=counts["fill"],
+            dispatch_window=counts["window"],
+            dispatch_deadline=counts["deadline"],
+            dispatch_drain=counts["drain"],
+            batch_size_hist=hist,
+            mean_batch_size=(total_in_batches / n_disp) if n_disp else 0.0,
+            latency_ms_mean=float(lat.mean()) if lat.size else 0.0,
+            latency_ms_p50=pct(50),
+            latency_ms_p95=pct(95),
+            latency_ms_p99=pct(99),
+            hit_rate=hit_rate,
+            service_estimate_ms=est_ms)
+
+    # -- dispatcher -------------------------------------------------------
+
+    def _depth_locked(self) -> int:
+        return len(self._hi) + len(self._lo)
+
+    def _check_locked(self, now: float) -> tuple[str | None, float | None]:
+        """(trigger satisfied right now | None, earliest future fire time).
+
+        O(1) amortized: the oldest queued submit time is the head of each
+        FIFO lane and the earliest deadline is the top of the lazy deadline
+        heap (stale entries for requests that already left the queue are
+        expired here), so the dispatcher never scans the queue.
+        """
+        n = self._depth_locked()
+        if n == 0:
+            return None, None
+        if n >= self.max_batch:     # full bucket: attribute to fill even
+            return "fill", None     # mid-drain/shutdown
+        if self._closed or self._draining:
+            return "drain", None
+        oldest = min(dq[0].t_submit for dq in (self._hi, self._lo) if dq)
+        t_window = oldest + self.window_s
+        while self._dl_heap and (self._dl_heap[0][2].popped
+                                 or self._dl_heap[0][2].future.cancelled()):
+            heapq.heappop(self._dl_heap)   # left the queue, or will be
+            # discarded at pop time -- either way its deadline must not
+            # drive a premature dispatch
+        t_deadline = (self._dl_heap[0][0] - self._service_est_s
+                      - _DEADLINE_MARGIN_S if self._dl_heap
+                      else float("inf"))
+        if now >= t_deadline:
+            return "deadline", None
+        if now >= t_window:
+            return "window", None
+        return None, min(t_window, t_deadline)
+
+    def _pop_batch_locked(self) -> list[_Request]:
+        """Cut one batch: priority lane first, FIFO within each lane.
+        Requests whose future a client already cancelled are discarded here
+        (never dispatched, never resolved again -- `set_running_or_notify_
+        cancel` also locks the survivors against a later cancel, so the
+        dispatcher's fan-out can never hit InvalidStateError)."""
+        batch: list[_Request] = []
+        while self._depth_locked() and len(batch) < self.max_batch:
+            rq = (self._hi or self._lo).popleft()
+            rq.popped = True
+            if rq.future.set_running_or_notify_cancel():
+                batch.append(rq)
+            else:
+                self._cancelled += 1
+        self._in_flight = len(batch)
+        self._space.notify_all()
+        return batch
+
+    def _run(self) -> None:
+        while True:
+            with self._lock:
+                while True:
+                    if self._closed and not self._depth_locked():
+                        self._idle.notify_all()
+                        return
+                    cause, t_next = self._check_locked(time.monotonic())
+                    if cause is not None:
+                        break
+                    if t_next is not None:
+                        self._work.wait(
+                            timeout=max(0.0, t_next - time.monotonic()))
+                    else:
+                        self._work.wait()
+                batch = self._pop_batch_locked()
+                if not batch:            # every popped request was cancelled
+                    self._idle.notify_all()
+                    continue
+            self._dispatch(batch, cause)
+
+    def _dispatch(self, batch: list[_Request], cause: str) -> None:
+        """Run one query_batch on the dispatcher thread and fan results out.
+
+        Exactly ``svc.query_batch([r for each request, in batch order])`` --
+        nothing is reordered or rewritten between the queue and the engine,
+        which is the whole bitwise-identity argument: a direct query_batch
+        of the same queries in the same order runs the same program on the
+        same inputs.
+
+        Counters are updated BEFORE the result fan-out so a stats() call
+        racing a just-resolved future can only see counts that lead the
+        futures, never lag them; in_flight is cleared (and drain() woken)
+        only AFTER the fan-out, so drain() implies every dispatched future
+        is resolved."""
+        t0 = time.monotonic()
+        err: BaseException | None = None
+        try:
+            dists = self.svc.query_batch([rq.r for rq in batch])
+        except BaseException as e:            # noqa: BLE001 -- fan out to
+            err = e                           # futures, keep serving
+        t_done = time.monotonic()
+        with self._lock:
+            info = getattr(self.svc, "last_batch_stats", None) or {}
+            if err is None and "hit_rate" in info:
+                self._hit_rate_sum += float(info["hit_rate"])
+                self._hit_rate_n += 1
+            ewma = 0.7 * self._service_est_s + 0.3 * (t_done - t0)
+            self._service_est_s = ewma if self._service_est_s else t_done - t0
+            self._dispatch_counts[cause] += 1
+            self._batch_hist[len(batch)] += 1
+            self.batch_log.append(tuple(rq.seq for rq in batch))
+            for rq in batch:
+                if err is None:
+                    self._completed += 1
+                    self._latencies.append(t_done - rq.t_submit)
+                    if rq.deadline is not None and t_done > rq.deadline:
+                        self._deadline_misses += 1
+                else:
+                    self._failed += 1
+        for i, rq in enumerate(batch):
+            if err is None:
+                rq.future.set_result(dists[i])
+            else:
+                rq.future.set_exception(err)
+        with self._lock:
+            self._in_flight = 0
+            self._idle.notify_all()

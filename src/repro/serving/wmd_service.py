@@ -40,6 +40,11 @@ Service API
       correctness oracle and the baseline for bench_query_batch.py.
   top_k(r, k) / top_k_batch(rs, k) -- nearest-k doc ids + distances
       (argpartition + local sort: O(N + k log k), not a full argsort).
+  async_service(**kw)       -- async admission front-end: a
+      `serving.coalescer.QueryCoalescer` that turns a concurrent stream of
+      single-query ``submit(r) -> Future`` calls into full `query_batch`
+      dispatches (fill/window/deadline micro-batching, backpressure,
+      ServingStats); `drain_async()` flushes every live front-end.
 
 Perf knobs (constructor fields):
   impl           -- default contraction path for query_batch.
@@ -72,7 +77,10 @@ query-stream demo of the cache); `launch/serve.py` exposes it via
 from __future__ import annotations
 
 import dataclasses
+import functools
+import threading
 import time
+import weakref
 from typing import Sequence
 
 import jax
@@ -86,10 +94,24 @@ from repro.core.distributed import (build_wmd_batch_fn,
                                     build_wmd_batch_fn_stripes, build_wmd_fn,
                                     pad_query, pad_query_batch,
                                     shard_wmd_inputs)
+# one copy of the pow2 bucket-rounding rule for the whole serving layer:
+# the coalescer's admission buckets must match the service's Q padding
+from repro.serving.coalescer import _next_pow2
 
 
-def _next_pow2(q: int) -> int:
-    return 1 << (q - 1).bit_length()
+def _serialized(fn):
+    """Serialize an engine entry point on the service's reentrant lock.
+
+    The engine is stateful (last_batch_stats; the K cache mutates a host
+    slot map and donates its device ring buffers), so concurrent callers --
+    several `async_service` dispatcher threads, or `warm()` on a client
+    thread while a dispatcher is live -- must take turns. Reentrant because
+    query_batch routes singletons through query."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._engine_lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
 
 
 # sentinel: "use the service's docs_chunk" (None already means unchunked)
@@ -125,6 +147,28 @@ class WMDService:
                               rows_bucket=self.cache_rows_bucket,
                               kexp_impl=self.kexp_impl)
         self.last_batch_stats: dict = {}
+        self._engine_lock = threading.RLock()   # see _serialized
+        # live async front-ends (async_service); weak so a shut-down
+        # coalescer the caller dropped doesn't accumulate on the service
+        self._coalescers: weakref.WeakSet = weakref.WeakSet()
+
+    def async_service(self, **kw):
+        """Async admission front-end: a `serving.coalescer.QueryCoalescer`
+        whose dispatcher feeds this service's `query_batch` (thread-safe
+        ``submit(r) -> Future``, micro-batching by fill/window/deadline --
+        see the coalescer module docstring for knobs). Usable as a context
+        manager (shutdown-with-drain on exit); `drain_async` flushes every
+        front-end this service has handed out."""
+        from repro.serving.coalescer import QueryCoalescer
+        co = QueryCoalescer(self, **kw)
+        self._coalescers.add(co)
+        return co
+
+    def drain_async(self, timeout: float | None = None) -> None:
+        """Drain hook: block until every live `async_service` front-end has
+        an empty queue and no in-flight batch (coalescers stay open)."""
+        for co in list(self._coalescers):
+            co.drain(timeout=timeout)
 
     @property
     def cache_stats(self):
@@ -179,6 +223,7 @@ class WMDService:
             self._stripe_fns[key] = fn
         return fn
 
+    @_serialized
     def query(self, r: np.ndarray) -> np.ndarray:
         """r: (V,) sparse query histogram -> (N,) distances."""
         sel_idx, r_sel = select_query(r)
@@ -188,6 +233,7 @@ class WMDService:
                                 self._vecs_d, self._cols_d, self._vals_d)
         return np.asarray(wmd)
 
+    @_serialized
     def query_batch(self, rs: Sequence[np.ndarray],
                     impl: str | None = None,
                     docs_chunk=_UNSET,
