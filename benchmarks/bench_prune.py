@@ -1,0 +1,182 @@
+"""Two-tier pruned retrieval: RWMD-prefiltered top-k vs the exact full scan.
+
+    PYTHONPATH=src python benchmarks/bench_prune.py [--tiny] \
+        [--docs 1024] [--k 16] [--out BENCH_prune.json]
+
+Per batch of Zipf queries three routes run on the same inputs:
+  * ``pruned``    -- `WMDService.top_k_batch(prune=True)`: doc-side RWMD
+                     lower bounds over all N docs (one batched min-SDDMM,
+                     word-id dedup across the batch), then the exact
+                     Sinkhorn rerank only on the candidate prefix, in
+                     fixed prune_chunk doc blocks in ascending-bound order.
+  * ``scan``      -- `top_k_scan_batch`: the SAME chunked rerank programs
+                     over every doc (bound order, no pruning) -- the
+                     bitwise oracle. Pruned must equal it exactly
+                     (asserted on EVERY batch: the exactness contract).
+  * ``full``      -- the production full scan: one (Q, N) `query_batch`
+                     program + tie-deterministic selection. The end-to-end
+                     baseline a deployed retriever would otherwise run.
+
+Headline fields: ``solves_avoided`` (fraction of the Q x N exact Sinkhorn
+solves the prefilter eliminated -- the paper-style work metric, machine
+independent) and ``speedup_vs_full`` / ``speedup_vs_scan`` (end-to-end
+wall-clock, interleaved-round medians). ``--tiny`` is the CI smoke shape
+and *gates*: solves_avoided must be >= 0.5 (exit 1 otherwise), per the
+two-tier engine's acceptance bar; the bitwise gate runs at every scale.
+
+The corpus matters: solves-avoided is a pure geometry property (how well
+per-doc-word min costs separate docs), so the artifact records the corpus
+shape alongside the numbers. Longer docs separate better (more far-word
+mass), which is why the defaults keep the generator's paper-ish
+mean_words=35.
+
+Self-contained on purpose (no benchmarks.common import): CI invokes it as
+a script with only the installed `repro` package on the path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def bench_interleaved(calls: dict, *, warmup: int = 1, rounds: int = 3):
+    """Median wall seconds per call, measured round-robin across variants."""
+    for fn in calls.values():
+        for _ in range(warmup):
+            fn()
+    times = {name: [] for name in calls}
+    for _ in range(rounds):
+        for name, fn in calls.items():
+            t0 = time.perf_counter()
+            fn()
+            times[name].append(time.perf_counter() - t0)
+    return {name: sorted(ts)[len(ts) // 2] for name, ts in times.items()}
+
+
+def run(*, vocab: int = 2048, docs: int = 1024, q: int = 8, k: int = 16,
+        query_words: int = 13, v_r: int = 16, mean_words: float = 35.0,
+        zipf_s: float = 1.3, cache_capacity: int = 2048,
+        prune_chunk: int = 64, batches: int = 3, rounds: int = 3,
+        gate_avoided: float | None = None, out: str | None = None) -> dict:
+    import numpy as np
+    from repro.configs.sinkhorn_wmd import WMDConfig
+    from repro.data import make_corpus, zipf_query_stream
+    from repro.launch.mesh import make_mesh
+    from repro.serving import WMDService
+
+    cfg = WMDConfig(name="bench-prune", vocab_size=vocab, embed_dim=64,
+                    num_docs=docs, nnz_max=64, v_r=v_r, lamb=1.0,
+                    max_iter=15)
+    data = make_corpus(vocab_size=vocab, embed_dim=cfg.embed_dim,
+                       num_docs=docs, num_queries=1,
+                       query_words=query_words, mean_words=mean_words,
+                       seed=0)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
+                     cache_capacity=cache_capacity, prune_chunk=prune_chunk)
+    stream = zipf_query_stream(vocab_size=vocab, query_words=query_words,
+                               s=zipf_s, seed=1)
+    results = {"vocab": vocab, "docs": docs, "Q": q, "k": k, "v_r": v_r,
+               "query_words": query_words, "mean_words": mean_words,
+               "nnz_max": data.ell.nnz_max, "zipf_s": zipf_s,
+               "max_iter": cfg.max_iter, "prune_chunk": prune_chunk,
+               "cache_capacity": cache_capacity, "points": [],
+               "note": ("per batch: pruned top-k asserted bitwise equal to "
+                        "the exhaustive chunked scan (the exactness "
+                        "contract) and set-equal to the one-program full "
+                        "scan; solves_avoided is the fraction of Q x N "
+                        "exact Sinkhorn solves the RWMD prefilter "
+                        "eliminated. Timing: interleaved-round medians on "
+                        "the last batch's queries.")}
+    last_qs = None
+    for b in range(batches):
+        qs = [next(stream) for _ in range(q)]
+        last_qs = qs
+        idx_p, d_p = svc.top_k_batch(qs, k, prune=True)
+        ps = dict(svc.last_prune_stats)
+        hit_rate = svc.last_batch_stats.get("hit_rate", 0.0)
+        idx_s, d_s = svc.top_k_scan_batch(qs, k)
+        bitwise = (np.array_equal(idx_p, idx_s)
+                   and np.array_equal(d_p, d_s))
+        assert bitwise, "pruned top-k must be bitwise equal to the scan"
+        idx_f, d_f = svc.top_k_batch(qs, k)
+        full_match = bool(np.array_equal(idx_p, idx_f))
+        point = {"batch": b, "solves_avoided": ps["solves_avoided"],
+                 "exact_solves": ps["exact_solves"],
+                 "scan_solves": ps["scan_solves"],
+                 "rerank_programs": ps["rerank_programs"],
+                 "bound_s": ps["bound_s"], "rerank_s": ps["rerank_s"],
+                 "hit_rate": hit_rate,
+                 "bitwise_vs_scan": bitwise,
+                 "idx_match_vs_full": full_match,
+                 "max_abs_err_vs_full": float(np.abs(d_p - d_f).max())}
+        results["points"].append(point)
+        print(f"prune/b{b},{ps['rerank_s'] * 1e6:.1f},"
+              f"avoided={ps['solves_avoided']:.2f}:"
+              f"solves={ps['exact_solves']}/{ps['scan_solves']}:"
+              f"bitwise={bitwise}:hit_rate={point['hit_rate']:.2f}")
+    med = bench_interleaved(
+        {"pruned": lambda: svc.top_k_batch(last_qs, k, prune=True),
+         "scan": lambda: svc.top_k_scan_batch(last_qs, k),
+         "full": lambda: svc.top_k_batch(last_qs, k)},
+        rounds=rounds)
+    avoided = sorted(p["solves_avoided"] for p in results["points"])[
+        len(results["points"]) // 2]
+    results["solves_avoided"] = avoided
+    results["t_pruned_s"] = med["pruned"]
+    results["t_scan_s"] = med["scan"]
+    results["t_full_s"] = med["full"]
+    results["speedup_vs_full"] = med["full"] / med["pruned"]
+    results["speedup_vs_scan"] = med["scan"] / med["pruned"]
+    results["bitwise_ok"] = all(p["bitwise_vs_scan"]
+                                for p in results["points"])
+    print(f"prune/headline,{med['pruned'] * 1e6:.1f},"
+          f"avoided={avoided:.2f}:"
+          f"speedup_vs_full={results['speedup_vs_full']:.2f}x:"
+          f"speedup_vs_scan={results['speedup_vs_scan']:.2f}x")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {out}")
+    if gate_avoided is not None and avoided < gate_avoided:
+        print(f"GATE FAILED: solves_avoided {avoided:.3f} < "
+              f"{gate_avoided}", file=sys.stderr)
+        raise SystemExit(1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vocab", type=int, default=2048)
+    ap.add_argument("--docs", type=int, default=1024)
+    ap.add_argument("--q", type=int, default=8)
+    ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--query-words", type=int, default=13)
+    ap.add_argument("--v-r", type=int, default=16)
+    ap.add_argument("--mean-words", type=float, default=35.0)
+    ap.add_argument("--zipf-s", type=float, default=1.3)
+    ap.add_argument("--cache-capacity", type=int, default=2048)
+    ap.add_argument("--prune-chunk", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape; also gates solves_avoided >= 0.5")
+    ap.add_argument("--out", default="BENCH_prune.json")
+    args = ap.parse_args()
+    if args.tiny:
+        run(vocab=512, docs=256, q=4, k=8, query_words=13,
+            mean_words=35.0, cache_capacity=512, prune_chunk=32,
+            batches=2, rounds=2, gate_avoided=0.5, out=args.out)
+    else:
+        run(vocab=args.vocab, docs=args.docs, q=args.q, k=args.k,
+            query_words=args.query_words, v_r=args.v_r,
+            mean_words=args.mean_words, zipf_s=args.zipf_s,
+            cache_capacity=args.cache_capacity,
+            prune_chunk=args.prune_chunk, batches=args.batches,
+            rounds=args.rounds, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

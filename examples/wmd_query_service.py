@@ -5,6 +5,8 @@
         --zipf-stream --cache-capacity 1024
     PYTHONPATH=src python examples/wmd_query_service.py \
         --coalesce --clients 8
+    PYTHONPATH=src python examples/wmd_query_service.py \
+        --top-k 8 --prune --docs 1024
 
 Loads a corpus once onto the mesh (vocab-striped K + doc-sharded ELL),
 then serves a stream of queries (bucketed by padded v_r, one psum per
@@ -16,6 +18,13 @@ batches drawn from `repro.data.zipf_query_stream` repeat word ids across
 queries, so after a few batches most precompute rows are already resident
 (`core.kcache`) and `query_batch` only computes the misses -- watch the
 per-batch hit rate climb and the precompute phase shrink.
+
+--top-k K --prune demos the two-tier pruned retriever: every doc is scored
+with the O(nnz) doc-side RWMD lower bound (`core.rwmd`), and the exact
+Sinkhorn rerank only runs on docs whose bound cannot rule them out of the
+top-k. The demo prints the solves-avoided fraction and *verifies* the
+pruned answer bitwise against `top_k_scan_batch`, the exhaustive scan
+through the same chunked engine -- the exactness contract in one run.
 
 --coalesce demos the async admission layer: ``--clients`` concurrent
 closed-loop clients each submit single queries to a
@@ -58,6 +67,16 @@ def main():
                     help="concurrent closed-loop clients for --coalesce")
     ap.add_argument("--requests-per-client", type=int, default=12)
     ap.add_argument("--coalesce-window-ms", type=float, default=5.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="> 0: run the two-tier pruned top-k demo with "
+                         "this k (add --prune to prune; without it the "
+                         "demo still verifies but prunes nothing)")
+    ap.add_argument("--prune", action="store_true",
+                    help="prune the top-k rerank with the RWMD prefilter "
+                         "and print solves-avoided (verified bitwise "
+                         "against the exact scan)")
+    ap.add_argument("--prune-chunk", type=int, default=64,
+                    help="doc-block size of the pruned rerank")
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -85,11 +104,46 @@ def main():
     t0 = time.perf_counter()
     svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
                      docs_chunk=args.docs_chunk or None,
+                     prune_chunk=args.prune_chunk,
                      cache_capacity=(args.cache_capacity
                                      if args.zipf_stream or args.coalesce
-                                     else 0))
+                                     or args.top_k else 0))
     print(f"corpus loaded+sharded in {time.perf_counter() - t0:.2f}s "
           f"(nnz={data.nnz})")
+
+    if args.top_k:
+        # two-tier retrieval: RWMD prefilter + exact Sinkhorn rerank. The
+        # pruned answer is verified BITWISE against the exhaustive scan
+        # through the same chunked engine -- fewer solves, same bits.
+        from repro.data import zipf_query_stream
+        stream = zipf_query_stream(vocab_size=cfg.vocab_size,
+                                   query_words=13, s=1.3, seed=0)
+        qs = [next(stream) for _ in range(args.queries)]
+        svc.top_k_batch(qs, args.top_k, prune=args.prune)  # compile
+        t0 = time.perf_counter()
+        idx_p, d_p = svc.top_k_batch(qs, args.top_k, prune=args.prune)
+        dt = time.perf_counter() - t0
+        for i in range(len(qs)):
+            print(f"query {i}: top{args.top_k}={idx_p[i].tolist()} "
+                  f"d={np.round(d_p[i], 3).tolist()}")
+        if args.prune:
+            ps = dict(svc.last_prune_stats)
+            idx_s, d_s = svc.top_k_scan_batch(qs, args.top_k)
+            exact = (np.array_equal(idx_p, idx_s)
+                     and np.array_equal(d_p, d_s))
+            print(f"pruned top-{args.top_k}: Q={len(qs)} in "
+                  f"{dt * 1e3:.1f} ms, solves avoided "
+                  f"{ps['solves_avoided']:.1%} "
+                  f"({ps['exact_solves']}/{ps['scan_solves']} exact "
+                  f"solves, {ps['rerank_programs']} rerank programs, "
+                  f"bound {ps['bound_s'] * 1e3:.1f} ms)")
+            print(f"bitwise-identical to the exact scan: {exact}")
+            assert exact, "pruned top-k must equal the exact scan"
+        else:
+            print(f"full-scan top-{args.top_k}: Q={len(qs)} in "
+                  f"{dt * 1e3:.1f} ms (add --prune to skip provably "
+                  f"out-of-top-k solves)")
+        return
 
     if args.coalesce:
         # concurrent clients each submit ONE query at a time; the coalescer

@@ -9,6 +9,7 @@ Layers (bottom-up):
   convergence     -- while-x-changes early-exit solver
   distributed     -- shard_map multi-chip / multi-pod engine
   kcache          -- cross-query word-id-keyed K/KM row cache
+  rwmd            -- doc-side RWMD lower bounds (top-k prune prefilter)
 """
 from repro.core.cost_matrix import cdist, cdist_direct, cdist_matmul
 from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
@@ -16,9 +17,11 @@ from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
                                 ell_from_doc_lists, pad_docs,
                                 rebucket_for_vocab_shards)
 from repro.core.sinkhorn import (SinkhornPrecompute, assemble_precompute,
-                                 precompute, precompute_rows, select_query,
-                                 sinkhorn_wmd_dense)
+                                 m_rows, precompute, precompute_rows,
+                                 select_query, sinkhorn_wmd_dense)
 from repro.core.kcache import KCache, KCacheStats
+from repro.core.rwmd import (assemble_m_stripes, rwmd_bound_batch,
+                             rwmd_lower_bound, rwmd_query_side_bound)
 from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute,
                                         batched_sinkhorn_loop, pad_k,
                                         precompute_batch, sddmm, spmm,
@@ -39,9 +42,11 @@ __all__ = [
     "BucketedEll", "EllDocs", "bucket_by_length",
     "ell_from_dense", "ell_from_csc", "ell_from_doc_lists",
     "pad_docs", "rebucket_for_vocab_shards",
-    "SinkhornPrecompute", "assemble_precompute", "precompute",
+    "SinkhornPrecompute", "assemble_precompute", "m_rows", "precompute",
     "precompute_rows", "select_query", "sinkhorn_wmd_dense",
     "KCache", "KCacheStats",
+    "assemble_m_stripes", "rwmd_bound_batch", "rwmd_lower_bound",
+    "rwmd_query_side_bound",
     "pad_k", "sddmm", "spmm", "sddmm_spmm_type1", "sddmm_spmm_type2",
     "sinkhorn_wmd_sparse",
     "BatchedSinkhornPrecompute", "precompute_batch",

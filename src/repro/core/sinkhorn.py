@@ -49,6 +49,25 @@ def select_query(r: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return sel.astype(np.int32), r_sel
 
 
+def m_rows(word_ids: jax.Array, vecs: jax.Array,
+           *, b2: jax.Array | None = None) -> jax.Array:
+    """Cost-matrix rows M[i] = |vecs[id_i] - vecs| (MXU matmul expansion).
+
+    THE single spelling of the M-row expression: the K/K.*M precompute
+    (`precompute_rows`, and through it the K cache) and the RWMD prune
+    bound (`core.rwmd`) both call it, which is what makes "the bound sees
+    the same geometry the engine's K.*M encodes" a structural guarantee
+    rather than a kept-in-sync convention -- the pruning exactness
+    contract assumes bound-M and engine-M agree bit for bit. ``b2``
+    optionally supplies precomputed per-vocab-word squared norms.
+    """
+    a = vecs[word_ids]                                  # (m, w)
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    if b2 is None:
+        b2 = jnp.sum(vecs * vecs, axis=-1)
+    return jnp.sqrt(jnp.maximum(a2 + b2[None, :] - 2.0 * (a @ vecs.T), 0.0))
+
+
 def precompute_rows(word_ids: jax.Array, vecs: jax.Array, lamb: float,
                     *, b2: jax.Array | None = None
                     ) -> tuple[jax.Array, jax.Array]:
@@ -59,14 +78,10 @@ def precompute_rows(word_ids: jax.Array, vecs: jax.Array, lamb: float,
     KM[i] = K[i] * M[i]. ``b2`` optionally supplies the precomputed
     per-vocab-word squared norms (sum(vecs**2, -1)); `core.kcache` passes it
     so the O(V*w) term is paid once per corpus instead of once per miss
-    batch. The math is the `cdist_matmul` MXU expansion spelled inline so
+    batch. The math is the `cdist_matmul` MXU expansion of `m_rows` so
     cached rows are bit-identical to the from-scratch `precompute` path.
     """
-    a = vecs[word_ids]                                  # (m, w)
-    a2 = jnp.sum(a * a, axis=-1)[:, None]
-    if b2 is None:
-        b2 = jnp.sum(vecs * vecs, axis=-1)
-    m = jnp.sqrt(jnp.maximum(a2 + b2[None, :] - 2.0 * (a @ vecs.T), 0.0))
+    m = m_rows(word_ids, vecs, b2=b2)
     k = jnp.exp(-lamb * m)
     return k, k * m
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import cdist as _cdist_kernel
 from repro.kernels import kexp as _kexp_kernel
+from repro.kernels import rwmd as _rwmd_kernel
 from repro.kernels import sddmm_spmm as _sddmm_spmm
 from repro.kernels._pad import pad_axis
 
@@ -105,6 +106,32 @@ def sddmm_spmm_type2_batch(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
         k_p, km_p, u_p, cols_p, vals_p,
         docs_blk=docs_blk, q_blk=q_blk, interpret=_interpret())
     return wmd[:q, :n]
+
+
+def rwmd_bound_batch(m_pad: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                     docs_blk: int = 8,
+                     q_blk: int | None = None) -> jax.Array:
+    """Batched doc-side RWMD min-SDDMM; see kernels.rwmd. Returns (Q, N).
+
+    Pads v_r to 8 and Q to q_blk with **+inf** (a pad query row must never
+    win the min -- the opposite of the K stripes' zero pad rows), docs to
+    docs_blk with ELL pad slots (val 0 -> masked out); un-pads the result
+    and finites all-pad filler-query rows to 0 (the engine's distance for
+    them is exactly 0, so a 0 bound can never prune them).
+    """
+    q, v_r, _ = m_pad.shape
+    n = cols.shape[0]
+    if q_blk is None:
+        q_blk = min(q, 8)
+    inf = float("inf")
+    m_p = _pad_to(_pad_to(m_pad, 1, 8, value=inf), 0, q_blk, value=inf)
+    cols_p = _pad_to(cols, 0, docs_blk, value=m_pad.shape[-1] - 1)
+    vals_p = _pad_to(vals, 0, docs_blk)
+    lb = _rwmd_kernel.rwmd_bound_batch(
+        m_p, cols_p, vals_p,
+        docs_blk=docs_blk, q_blk=q_blk, interpret=_interpret())
+    lb = lb[:q, :n]
+    return jnp.where(jnp.isfinite(lb), lb, 0.0)
 
 
 def sddmm_spmm_chunked(k_chunks: jax.Array, r_sel: jax.Array, u: jax.Array,

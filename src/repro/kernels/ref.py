@@ -60,6 +60,21 @@ def sddmm_spmm_type2_batch(k_pad: jax.Array, km_pad: jax.Array, u: jax.Array,
     )(k_pad, km_pad, u)
 
 
+def rwmd_bound_batch(m_pad: jax.Array, cols: jax.Array,
+                     vals: jax.Array) -> jax.Array:
+    """Oracle for the doc-side RWMD min-SDDMM (core.rwmd / kernels.rwmd):
+    densify the ELL, take the per-vocab-word min over query rows of the full
+    M stripe, and contract with the dense doc frequencies -- no gather, no
+    slot loop. Pad query rows carry +inf in m_pad (never win the min);
+    all-pad filler queries produce inf/NaN rows finited to 0 here exactly
+    like the production paths."""
+    num_vocab = m_pad.shape[-1] - 1
+    c = _ell_to_dense(cols, vals, num_vocab)                  # (V, N)
+    mins = jnp.min(m_pad[:, :, :num_vocab], axis=1)           # (Q, V)
+    lb = jnp.einsum("qv,vn->qn", mins, c)
+    return jnp.where(jnp.isfinite(lb), lb, 0.0)
+
+
 def cdist(a: jax.Array, b: jax.Array, *, squared: bool = False) -> jax.Array:
     """Oracle: direct elementwise |a_i - b_j|."""
     d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel for the batched doc-side RWMD min-SDDMM.
+
+The prefilter's reduction (`core.rwmd`) has the same sampled-access
+structure as the engine's SDDMM (`kernels.sddmm_spmm`): per ELL slot, one
+gather of a column stripe at ``cols[j, s]``. The contraction differs -- a
+min over the query-word axis instead of a dot with u, and a val-weighted
+accumulation of the scalar mins instead of a column accumulation:
+
+  grid = (Q/q_blk, N/docs_blk)          # M stripe resident per Q stripe
+  for j in docs_blk:                    # docs of this tile
+    for s in nnz_max:                   # slots of doc j
+      mcols = M[:, :, cols[j,s]]        # (q_blk, v_r) -- ONE gather
+      mn    = min_i mcols[:, i]         # q_blk min-reductions
+      acc  += where(vals[j,s] != 0, vals[j,s] * mn, 0)
+  lb[:, tile_j] = acc
+
+Pad conventions (enforced by the `ops.rwmd_bound_batch` wrapper):
+  * pad *query rows* carry +inf so they never win the min (the opposite of
+    the K stripes' zeroed pad rows: a zero row would collapse every min);
+  * pad *ELL slots* (val == 0) are excluded by the val mask, so the M pad
+    column's value is irrelevant;
+  * pad docs / all-pad filler queries produce 0 / +inf partials that the
+    wrapper slices off resp. finites to 0.
+
+VMEM working set per grid step mirrors the batched SDDMM-SpMM kernels with
+one operand fewer: the (q_blk, v_r, Vloc+1) M stripe dominates; cols/vals
+tiles add 2 * docs_blk * nnz_max * 4B; the output tile is (q_blk, docs_blk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rwmd_kernel(m_ref, cols_ref, vals_ref, lb_ref):
+    """One (doc tile, Q stripe): per-slot gather feeds all q_blk mins."""
+    q_blk = m_ref.shape[0]
+    docs_blk, nnz_max = cols_ref.shape
+    dtype = lb_ref.dtype
+
+    def doc_body(j, _):
+        def slot_body(s, acc):
+            col = cols_ref[j, s]
+            mcols = m_ref[:, :, col]                 # (q_blk, v_r) ONE gather
+            mn = jnp.min(mcols, axis=1)              # q_blk min-reductions
+            val = vals_ref[j, s]
+            return acc + jnp.where(val != 0.0, val * mn, 0.0)
+
+        acc = jax.lax.fori_loop(
+            0, nnz_max, slot_body, jnp.zeros((q_blk,), dtype))
+        lb_ref[:, 0, j] = acc
+        return 0
+
+    jax.lax.fori_loop(0, docs_blk, doc_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("docs_blk", "q_blk", "interpret"))
+def rwmd_bound_batch(m_pad: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                     docs_blk: int = 8, q_blk: int = 8,
+                     interpret: bool = False) -> jax.Array:
+    """Batched min-SDDMM. Shapes: m_pad (Q, v_r, Vloc+1), cols/vals
+    (N, nnz_max) with N % docs_blk == 0 and Q % q_blk == 0. Returns (Q, N)
+    raw partial bounds (callers finite-ize filler-query rows)."""
+    q = m_pad.shape[0]
+    n, nnz_max = cols.shape
+    grid = (q // q_blk, n // docs_blk)       # M stripes stay VMEM-resident
+    out = pl.pallas_call(
+        _rwmd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_blk,) + m_pad.shape[1:], lambda qi, i: (qi, 0, 0)),
+            pl.BlockSpec((docs_blk, nnz_max), lambda qi, i: (i, 0)),
+            pl.BlockSpec((docs_blk, nnz_max), lambda qi, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((q_blk, 1, docs_blk),
+                               lambda qi, i: (qi, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, 1, n), vals.dtype),
+        interpret=interpret,
+    )(m_pad, cols, vals)
+    return out[:, 0]

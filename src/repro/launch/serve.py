@@ -38,6 +38,16 @@ def main():
     ap.add_argument("--tol", type=float, default=0.0,
                     help="sinkhorn-wmd: early-exit tolerance for the "
                          "batched solve (0 = fixed max_iter)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sinkhorn-wmd: serve top-k retrieval instead of "
+                         "full distance rows (> 0 sets k; with "
+                         "--coalesce-window-ms the stream submits via "
+                         "submit_top_k and coalesces homogeneously)")
+    ap.add_argument("--prune", action="store_true",
+                    help="sinkhorn-wmd: route --top-k through the two-tier "
+                         "pruned engine (RWMD prefilter + exact Sinkhorn "
+                         "rerank; bitwise-identical to the full scan) and "
+                         "print solves-avoided")
     ap.add_argument("--coalesce-window-ms", type=float, default=0.0,
                     help="sinkhorn-wmd: > 0 runs the async serving loop -- "
                          "a QueryCoalescer micro-batches a query stream "
@@ -95,6 +105,28 @@ def main():
         if args.coalesce_window_ms > 0:
             _serve_wmd_loop(svc, cfg, args)
             return
+        if args.top_k and (args.batch_queries or args.prune):
+            # top-k retrieval over the whole query set in one call: pruned
+            # (two-tier) or full scan, same (bitwise-identical) answer
+            svc.top_k_batch(data.queries, args.top_k, prune=args.prune)
+            t0 = time.perf_counter()
+            idx_b, dist_b = svc.top_k_batch(data.queries, args.top_k,
+                                            prune=args.prune)
+            dt = time.perf_counter() - t0
+            for i in range(len(data.queries)):
+                print(f"[serve-wmd] query {i}: top{args.top_k} docs "
+                      f"{idx_b[i].tolist()} "
+                      f"d={np.round(dist_b[i], 3).tolist()}")
+            route = "pruned" if args.prune else "full-scan"
+            msg = (f"[serve-wmd] top-k {route} Q={len(idx_b)}: "
+                   f"{dt * 1e3:.1f} ms")
+            if args.prune:
+                ps = svc.last_prune_stats
+                msg += (f", solves avoided "
+                        f"{ps['solves_avoided']:.1%} "
+                        f"({ps['exact_solves']}/{ps['scan_solves']})")
+            print(msg)
+            return
         if args.batch_queries:
             svc.query_batch(data.queries)          # compile outside timing
             t0 = time.perf_counter()
@@ -109,9 +141,10 @@ def main():
             return
         for i, q in enumerate(data.queries):
             t0 = time.perf_counter()
-            idx, dist = svc.top_k(q, k=5)
+            idx, dist = svc.top_k(q, k=args.top_k or 5)
             dt = time.perf_counter() - t0
-            print(f"[serve-wmd] query {i}: top5 docs {idx.tolist()} "
+            print(f"[serve-wmd] query {i}: top{args.top_k or 5} docs "
+                  f"{idx.tolist()} "
                   f"d={np.round(dist, 3).tolist()} ({dt * 1e3:.1f} ms)")
         return
 
@@ -173,8 +206,17 @@ def _serve_wmd_loop(svc, cfg, args):
                            max_batch=args.max_batch,
                            max_queue=args.max_queue,
                            default_deadline_ms=args.deadline_ms or None)
-    co.warm(qs)                # compile every pow2 bucket outside serving
-    print(f"[serve-wmd] serving loop: {args.requests} zipf queries, "
+    if args.top_k:
+        # compile the pruned engine's programs for every pow2 bucket this
+        # coalescer can cut (the bound program is shaped per bucket), so
+        # no live top-k dispatch pays compile time
+        co.warm_top_k(qs, args.top_k)
+        submit = lambda r: co.submit_top_k(r, args.top_k)   # noqa: E731
+    else:
+        co.warm(qs)            # compile every pow2 bucket outside serving
+        submit = co.submit
+    print(f"[serve-wmd] serving loop: {args.requests} zipf queries"
+          + (f" (top-{args.top_k} pruned)" if args.top_k else "") + ", "
           f"window={args.coalesce_window_ms:g} ms "
           f"max_batch={co.max_batch} max_queue={args.max_queue} "
           f"rate={'saturating' if args.rate_qps <= 0 else args.rate_qps} "
@@ -186,9 +228,9 @@ def _serve_wmd_loop(svc, cfg, args):
             # loadgen's open loop: absolute seeded Poisson schedule, so slow
             # submits (e.g. blocking backpressure) make the driver catch up
             # instead of silently lowering the offered rate
-            open_loop(co.submit, qs, rate_qps=args.rate_qps, seed=0)
+            open_loop(submit, qs, rate_qps=args.rate_qps, seed=0)
         else:
-            futs = [co.submit(r) for r in qs]      # saturating back-to-back
+            futs = [submit(r) for r in qs]         # saturating back-to-back
         co.drain()
     except KeyboardInterrupt:
         print("\n[serve-wmd] SIGINT: draining queued + in-flight requests")
@@ -197,10 +239,14 @@ def _serve_wmd_loop(svc, cfg, args):
         dt = time.perf_counter() - t0
         st = co.stats()
         if futs and futs[0].exception() is None:
-            d = futs[0].result()
-            idx = np.argsort(d)[:5]
-            print(f"[serve-wmd] sample query 0: top5 docs {idx.tolist()} "
-                  f"d={np.round(d[idx], 3).tolist()}")
+            res = futs[0].result()
+            if args.top_k:
+                idx, d = res
+            else:
+                idx = np.argsort(res)[:5]
+                d = res[idx]
+            print(f"[serve-wmd] sample query 0: top docs {idx.tolist()} "
+                  f"d={np.round(d, 3).tolist()}")
         print(f"[serve-wmd] served {st.completed}/{st.submitted} in "
               f"{dt:.2f}s ({st.completed / max(dt, 1e-9):.1f} q/s), "
               f"mean batch {st.mean_batch_size:.1f}")

@@ -30,6 +30,18 @@ Serving architecture (queue -> dispatcher -> engine)
   **bitwise identical** to a direct ``query_batch`` of the same queries in
   the same order (asserted by tests/test_coalescer.py via `batch_log`
   oracle replay, cache on and off).
+* **Top-k requests** -- ``submit_top_k(r, k)`` coalesces retrieval requests
+  exactly like plain queries: batches are cut *homogeneous* (one kind, one
+  k -- the cut stops at the first kind change, the next cut picks up the
+  other run), so a top-k batch is literally one
+  ``svc.top_k_batch(rs, k, prune=True)`` dispatch of the two-tier pruned
+  engine, whose results are bitwise-identical to the exact full scan.
+  The deadline trigger budgets with a per-kind service-time EWMA (top-k
+  and plain dispatches cost very differently). Mixed-kind caveat: cuts
+  are FIFO, so a deadline request queued behind a foreign-kind run waits
+  out that one dispatch before its own cut -- under mixed traffic,
+  deadline budgets should leave one foreign service time of slack (the
+  same slack a request arriving behind an already-full bucket needs).
 * **Dispatch triggers** -- a batch is cut when the first of these fires
   (per-dispatch counts are in `ServingStats`):
     - *fill*:     the ``max_batch`` Q bucket is full (``max_batch`` is
@@ -132,6 +144,8 @@ class _Request:
     t_submit: float
     deadline: float | None        # absolute monotonic time, or None
     priority: int
+    k: int | None = None          # top-k request (None = plain distances);
+                                  # batches are cut homogeneous per kind
     popped: bool = False          # left the queue (dispatched or discarded);
                                   # lazily expires stale deadline-heap entries
 
@@ -217,7 +231,13 @@ class QueryCoalescer:
         self._latencies = collections.deque(maxlen=latency_window)
         self._hit_rate_sum = 0.0
         self._hit_rate_n = 0
-        self._service_est_s = 0.0
+        self._service_est_s = 0.0             # combined (ServingStats)
+        # per-kind estimates for the deadline trigger: a pruned top-k
+        # dispatch (bound + per-query rerank loop) costs orders of
+        # magnitude more than a plain query_batch, and feeding one shared
+        # EWMA would make plain deadlines fire absurdly early (degenerate
+        # batch-of-1 cuts) and top-k deadlines far too late
+        self._service_est_kind: dict[bool, float] = {}
         self.batch_log: collections.deque[tuple[int, ...]] = \
             collections.deque(maxlen=batch_log_size)
 
@@ -233,6 +253,30 @@ class QueryCoalescer:
         distance row. Thread-safe. ``deadline_ms`` overrides the default
         deadline; ``priority > 0`` routes via the priority lane; ``timeout``
         bounds a *blocking* backpressure wait (seconds)."""
+        return self._submit(r, None, deadline_ms, priority, timeout)
+
+    def submit_top_k(self, r: np.ndarray, k: int = 10, *,
+                     deadline_ms: float | None = None, priority: int = 0,
+                     timeout: float | None = None) -> Future:
+        """Enqueue one top-k retrieval request; returns a Future of an
+        ``(idx (k,), dist (k,))`` pair served by the two-tier pruned engine
+        (`WMDService.top_k_batch(..., prune=True)`).
+
+        Top-k requests coalesce with each other exactly like plain queries
+        do: the dispatcher cuts *homogeneous* batches (one kind, one k), so
+        a coalesced top-k batch is literally one ``top_k_batch(rs, k,
+        prune=True)`` call -- the pruned engine's bitwise contract carries
+        over unchanged. Under mixed traffic a cut stops at the first
+        kind/k change (FIFO order is preserved; the next cut picks up the
+        other run), so interleaving kinds costs batch size, not
+        correctness."""
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        return self._submit(r, int(k), deadline_ms, priority, timeout)
+
+    def _submit(self, r: np.ndarray, k: int | None,
+                deadline_ms: float | None, priority: int,
+                timeout: float | None) -> Future:
         with self._lock:
             if self._closed:
                 raise CoalescerClosedError("coalescer is shut down")
@@ -258,7 +302,7 @@ class QueryCoalescer:
                     else deadline_ms / 1e3)
             req = _Request(seq=self._seq, r=r, future=Future(), t_submit=now,
                            deadline=None if dl_s is None else now + dl_s,
-                           priority=priority)
+                           priority=priority, k=k)
             self._seq += 1
             (self._hi if priority > 0 else self._lo).append(req)
             if req.deadline is not None:
@@ -281,6 +325,17 @@ class QueryCoalescer:
         while qs and b <= self.max_batch:
             self.svc.query_batch(list(qs[:b]))
             if b >= len(qs):        # shorter qs can't fill bigger buckets
+                break
+            b *= 2
+
+    def warm_top_k(self, qs: Sequence[np.ndarray], k: int) -> None:
+        """Top-k twin of `warm`: compile the pruned engine's programs (the
+        per-pow2-bucket bound program + the shared rerank chunk program)
+        before serving, so no live top-k dispatch pays compile time."""
+        b = 1
+        while qs and b <= self.max_batch:
+            self.svc.top_k_batch(list(qs[:b]), k, prune=True)
+            if b >= len(qs):
                 break
             b *= 2
 
@@ -406,9 +461,15 @@ class QueryCoalescer:
             heapq.heappop(self._dl_heap)   # left the queue, or will be
             # discarded at pop time -- either way its deadline must not
             # drive a premature dispatch
-        t_deadline = (self._dl_heap[0][0] - self._service_est_s
-                      - _DEADLINE_MARGIN_S if self._dl_heap
-                      else float("inf"))
+        if self._dl_heap:
+            # budget with the estimate of the deadline request's OWN kind
+            # (top-k and plain dispatches cost very differently); fall
+            # back to the combined EWMA before that kind's first sample
+            est = self._service_est_kind.get(
+                self._dl_heap[0][2].k is not None, self._service_est_s)
+            t_deadline = self._dl_heap[0][0] - est - _DEADLINE_MARGIN_S
+        else:
+            t_deadline = float("inf")
         if now >= t_deadline:
             return "deadline", None
         if now >= t_window:
@@ -416,16 +477,27 @@ class QueryCoalescer:
         return None, min(t_window, t_deadline)
 
     def _pop_batch_locked(self) -> list[_Request]:
-        """Cut one batch: priority lane first, FIFO within each lane.
-        Requests whose future a client already cancelled are discarded here
-        (never dispatched, never resolved again -- `set_running_or_notify_
-        cancel` also locks the survivors against a later cancel, so the
-        dispatcher's fan-out can never hit InvalidStateError)."""
+        """Cut one batch: priority lane first, FIFO within each lane, and
+        HOMOGENEOUS in kind -- the cut stops at the first request whose
+        (kind, k) differs from the batch head's, so a batch is always one
+        plain ``query_batch`` or one ``top_k_batch(k, prune=True)`` call
+        (the next cut picks up the other run; FIFO order is never
+        violated). Requests whose future a client already cancelled are
+        discarded here regardless of kind (never dispatched, never
+        resolved again -- `set_running_or_notify_cancel` also locks the
+        survivors against a later cancel, so the dispatcher's fan-out can
+        never hit InvalidStateError)."""
         batch: list[_Request] = []
+        kind: object = None
         while self._depth_locked() and len(batch) < self.max_batch:
-            rq = (self._hi or self._lo).popleft()
+            lane = self._hi or self._lo
+            head = lane[0]
+            if batch and not head.future.cancelled() and head.k != kind:
+                break               # kind change: leave it for the next cut
+            rq = lane.popleft()
             rq.popped = True
             if rq.future.set_running_or_notify_cancel():
+                kind = rq.k
                 batch.append(rq)
             else:
                 self._cancelled += 1
@@ -463,6 +535,11 @@ class QueryCoalescer:
         of the same queries in the same order runs the same program on the
         same inputs.
 
+        Top-k batches (homogeneous by the pop rule) run
+        ``svc.top_k_batch(rs, k, prune=True)`` instead and fan out
+        ``(idx, dist)`` row pairs -- same determinism argument, now backed
+        by the pruned engine's bitwise-identical-to-exact-scan contract.
+
         Counters are updated BEFORE the result fan-out so a stats() call
         racing a just-resolved future can only see counts that lead the
         futures, never lag them; in_flight is cleared (and drain() woken)
@@ -470,8 +547,16 @@ class QueryCoalescer:
         is resolved."""
         t0 = time.monotonic()
         err: BaseException | None = None
+        results: list = []
         try:
-            dists = self.svc.query_batch([rq.r for rq in batch])
+            kind = batch[0].k
+            if kind is None:
+                dists = self.svc.query_batch([rq.r for rq in batch])
+                results = [dists[i] for i in range(len(batch))]
+            else:
+                idx, dist = self.svc.top_k_batch(
+                    [rq.r for rq in batch], kind, prune=True)
+                results = [(idx[i], dist[i]) for i in range(len(batch))]
         except BaseException as e:            # noqa: BLE001 -- fan out to
             err = e                           # futures, keep serving
         t_done = time.monotonic()
@@ -482,6 +567,11 @@ class QueryCoalescer:
                 self._hit_rate_n += 1
             ewma = 0.7 * self._service_est_s + 0.3 * (t_done - t0)
             self._service_est_s = ewma if self._service_est_s else t_done - t0
+            is_topk = batch[0].k is not None
+            prev = self._service_est_kind.get(is_topk)
+            self._service_est_kind[is_topk] = (
+                t_done - t0 if prev is None
+                else 0.7 * prev + 0.3 * (t_done - t0))
             self._dispatch_counts[cause] += 1
             self._batch_hist[len(batch)] += 1
             self.batch_log.append(tuple(rq.seq for rq in batch))
@@ -495,7 +585,7 @@ class QueryCoalescer:
                     self._failed += 1
         for i, rq in enumerate(batch):
             if err is None:
-                rq.future.set_result(dists[i])
+                rq.future.set_result(results[i])
             else:
                 rq.future.set_exception(err)
         with self._lock:

@@ -39,7 +39,31 @@ Service API
   query_batch_sequential(rs) -- the per-query dispatch loop, kept as the
       correctness oracle and the baseline for bench_query_batch.py.
   top_k(r, k) / top_k_batch(rs, k) -- nearest-k doc ids + distances
-      (argpartition + local sort: O(N + k log k), not a full argsort).
+      (argpartition + a tie-deterministic local sort: O(N + k log k), not a
+      full argsort; ties are broken by doc id so every route selects the
+      same set).
+      With ``prune=True`` the two-tier retrieval engine runs instead: every
+      doc is scored with the O(nnz) doc-side RWMD lower bound (`core.rwmd`
+      -- batched across the query set with the K-cache's word-id dedup),
+      docs are visited in ascending-bound order in fixed ``prune_chunk``
+      doc blocks (candidate sets stay cache-resident), and the exact
+      Sinkhorn rerank (the stripes engine, precompute served by the
+      cross-query K cache) runs only until the next block's bound exceeds
+      the running k-th exact distance -- every doc past that point is
+      provably outside the top-k. The contract is exact: pruned top-k
+      returns the bitwise-identical (distance, doc-id) set as
+      `top_k_scan_batch`, the exhaustive scan through the SAME chunked
+      rerank programs (asserted by tests/test_rwmd_properties.py, the
+      golden table, and every bench_prune.py batch), while skipping the
+      pruned docs' solves entirely (``last_prune_stats['solves_avoided']``
+      -- >= 0.9 at N >= 1024, k <= 16 on the Zipf corpus). Bound soundness
+      at a *finite iteration budget* is why the DOC-side RWMD is used --
+      see core.rwmd's module docstring.
+  top_k_scan_batch(rs, k) -- the pruned path's oracle: exact full scan
+      through the same per-query chunked rerank engine (bound order, no
+      pruning). Slower than top_k_batch's one-program full scan by
+      construction; exists to make "pruned == exact scan" a bitwise
+      statement rather than an fp32 one.
   async_service(**kw)       -- async admission front-end: a
       `serving.coalescer.QueryCoalescer` that turns a concurrent stream of
       single-query ``submit(r) -> Future`` calls into full `query_batch`
@@ -61,8 +85,26 @@ Perf knobs (constructor fields):
                     over the ``model`` axis like the vocab striping.
   cache_rows_bucket -- static chunk size of the cache-miss row compute
                     (one compiled program per bucket; also the cache's
-                    bit-reproducibility guarantee, see core.kcache).
+                    bit-reproducibility guarantee, see core.kcache). The
+                    RWMD prefilter's M-row dedup reuses the same bucket.
   kexp_impl      -- "jnp" | "kernel": row-precompute path for cache misses.
+  prune_chunk    -- doc-block size of the pruned rerank (rounded up to the
+                    doc-shard product; one fixed-shape (1, prune_chunk)
+                    stripes program reranks every candidate block, which is
+                    both the cache-blocking and the bitwise argument: every
+                    exact distance -- pruned or scan -- comes from the same
+                    program shape).
+  prune_margin   -- relative safety slack of the prune test (a doc is
+                    pruned only when bound * (1 - margin) exceeds the k-th
+                    exact distance): covers fp dot-rounding between the
+                    bound and the engine's distance (~1e-6 observed) with
+                    ~1000x headroom while costing a negligible number of
+                    extra solves (the bound's real gap is >= 4% on the
+                    bench corpus).
+  bound_impl     -- "fused" | "kernel": min-SDDMM path of the prefilter.
+  bound_docs_chunk -- cache-block the (Q, N, nnz, v_r) bound gather over
+                    doc chunks (None = unchunked; the default keeps the
+                    prefilter's working set ~tens of MB at bulk N).
 
 Cache observability: ``cache_stats`` (cumulative hits / misses / evictions /
 hit_rate) and ``last_batch_stats`` (per-call ``precompute_s`` / ``solve_s``
@@ -86,9 +128,11 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import sinkhorn_wmd as wmd_cfg
 from repro.core import formats, select_query
+from repro.core import rwmd as rwmd_core
 from repro.core.kcache import KCache
 from repro.core.distributed import (build_wmd_batch_fn,
                                     build_wmd_batch_fn_stripes, build_wmd_fn,
@@ -130,6 +174,10 @@ class WMDService:
     cache_capacity: int = 0
     cache_rows_bucket: int = 128
     kexp_impl: str = "jnp"
+    prune_chunk: int = 64
+    prune_margin: float = 1e-3
+    bound_impl: str = "fused"
+    bound_docs_chunk: int | None = 256
 
     def __post_init__(self):
         model_size = self.mesh.shape["model"]
@@ -146,7 +194,23 @@ class WMDService:
                               self.cfg.lamb, mesh=self.mesh,
                               rows_bucket=self.cache_rows_bucket,
                               kexp_impl=self.kexp_impl)
+        # prefilter state: the bound runs replicated on the ORIGINAL
+        # (un-rebucketed) ELL -- the min over a doc's words needs the doc's
+        # whole support, which vocab re-bucketing splits across shards
+        self._ell_cols_d = jnp.asarray(self.ell.cols)
+        self._ell_vals_d = jnp.asarray(self.ell.vals)
+        self._b2 = jnp.sum(self._vecs_d * self._vecs_d, axis=-1)
+        self._doc_shards = 1
+        for a in self._doc_axes:
+            self._doc_shards *= self.mesh.shape[a]
+        # rerank chunks are placed like the corpus ELL, so the chunk must
+        # divide across the doc shards
+        self._rerank_chunk = -(-max(self.prune_chunk, 1)
+                               // self._doc_shards) * self._doc_shards
+        self._rerank_spec = NamedSharding(
+            self.mesh, P("model", tuple(self._doc_axes), None))
         self.last_batch_stats: dict = {}
+        self.last_prune_stats: dict = {}
         self._engine_lock = threading.RLock()   # see _serialized
         # live async front-ends (async_service); weak so a shut-down
         # coalescer the caller dropped doesn't accumulate on the service
@@ -271,19 +335,8 @@ class WMDService:
             # faster singleton plan either way.
             self.last_batch_stats = {}     # no stripes phases for this call
             return self.query_batch_sequential(rs)
-        sels, rsels = zip(*[select_query(r) for r in rs])
-        sel_b, r_b, mask_b = pad_query_batch(sels, rsels, self.cfg.v_r)
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
         q = len(rs)
-        q_pad = _next_pow2(q) - q
-        if q_pad:
-            # admission filler: all-pad queries (mask == 0 everywhere) whose
-            # stripe rows are zeroed, so they solve to 0 and are discarded.
-            sel_b = np.concatenate(
-                [sel_b, np.zeros((q_pad, self.cfg.v_r), sel_b.dtype)])
-            r_b = np.concatenate(
-                [r_b, np.ones((q_pad, self.cfg.v_r), r_b.dtype)])
-            mask_b = np.concatenate(
-                [mask_b, np.zeros((q_pad, self.cfg.v_r), mask_b.dtype)])
         dc = self.docs_chunk if docs_chunk is _UNSET else (docs_chunk or None)
         if use_cache is None and self.cache_capacity == 0:
             # cache disabled and no explicit routing request: the legacy
@@ -318,27 +371,213 @@ class WMDService:
         """Per-query dispatch loop -- the oracle/baseline for query_batch."""
         return np.stack([self.query(r) for r in rs])
 
+    def _padded_query_batch(self, rs: Sequence[np.ndarray]):
+        """Select + bucket-pad queries and append pow2 admission filler.
+
+        Filler queries are all-pad (mask == 0 everywhere): their stripe
+        rows are zeroed (K path) resp. +inf (M path), so they solve to 0 /
+        bound to 0 and are sliced off. Returns (sel_b, r_b, mask_b), each
+        (Q_pow2, v_r)."""
+        sels, rsels = zip(*[select_query(r) for r in rs])
+        sel_b, r_b, mask_b = pad_query_batch(sels, rsels, self.cfg.v_r)
+        q_pad = _next_pow2(len(rs)) - len(rs)
+        if q_pad:
+            sel_b = np.concatenate(
+                [sel_b, np.zeros((q_pad, self.cfg.v_r), sel_b.dtype)])
+            r_b = np.concatenate(
+                [r_b, np.ones((q_pad, self.cfg.v_r), r_b.dtype)])
+            mask_b = np.concatenate(
+                [mask_b, np.zeros((q_pad, self.cfg.v_r), mask_b.dtype)])
+        return sel_b, r_b, mask_b
+
     @staticmethod
     def _top_k(d: np.ndarray, k: int) -> np.ndarray:
-        """Indices of the k smallest distances, sorted ascending:
-        argpartition (O(N)) + a local sort of k (O(k log k)) instead of a
-        full O(N log N) argsort."""
-        k = min(k, d.shape[-1])
-        idx = np.argpartition(d, k - 1, axis=-1)[..., :k]
-        order = np.argsort(np.take_along_axis(d, idx, axis=-1), axis=-1)
-        return np.take_along_axis(idx, order, axis=-1)
+        """Indices of the k smallest distances, ordered by (distance,
+        doc id): argpartition (O(N)) + an O(N) tie sweep + a local sort of
+        k (O(k log k)) instead of a full O(N log N) argsort.
 
-    def top_k(self, r: np.ndarray, k: int = 10) -> tuple[np.ndarray,
-                                                         np.ndarray]:
+        Ties at the k-th value are broken by the smallest doc id --
+        argpartition's internal tie placement is arbitrary, and a
+        deterministic selection rule is what lets every route (full scan,
+        exhaustive chunked scan, pruned) return the *identical* set even
+        when the corpus contains duplicate docs."""
+        k = min(k, d.shape[-1])
+        flat = d.reshape(-1, d.shape[-1])
+        out = np.empty((flat.shape[0], k), np.int64)
+        for i, row in enumerate(flat):
+            kth = np.partition(row, k - 1)[k - 1]
+            below = np.nonzero(row < kth)[0]           # <= k - 1 of these
+            ties = np.nonzero(row == kth)[0][:k - below.size]
+            idx = np.concatenate([below, ties])
+            out[i] = idx[np.lexsort((idx, row[idx]))]
+        return out.reshape(*d.shape[:-1], k)
+
+    def top_k(self, r: np.ndarray, k: int = 10, *, prune: bool = False,
+              **kw) -> tuple[np.ndarray, np.ndarray]:
+        """Nearest-k docs for one query. ``prune=True`` routes through the
+        two-tier pruned engine (see `top_k_batch`)."""
+        if prune:
+            idx, dist = self.top_k_batch([r], k, prune=True, **kw)
+            return idx[0], dist[0]
         d = self.query(r)
         idx = self._top_k(d, k)
         return idx, d[idx]
 
-    def top_k_batch(self, rs: Sequence[np.ndarray], k: int = 10,
+    def top_k_batch(self, rs: Sequence[np.ndarray], k: int = 10, *,
+                    prune: bool = False,
                     **kw) -> tuple[np.ndarray, np.ndarray]:
-        """Batched nearest-k: (Q, k) doc ids + distances via `query_batch`
-        (one device program for all Q solves; ``**kw`` forwards impl /
-        docs_chunk / use_cache)."""
+        """Batched nearest-k: (Q, k) doc ids + distances.
+
+        Default: `query_batch` (one device program for all Q x N solves)
+        followed by the tie-deterministic selection; ``**kw`` forwards
+        impl / docs_chunk / use_cache. With ``prune=True`` the two-tier
+        engine runs instead -- RWMD prefilter over all N docs, exact
+        Sinkhorn rerank only on the candidate prefix -- and returns the
+        bitwise-identical set as `top_k_scan_batch` while skipping the
+        pruned docs' solves (stats in ``last_prune_stats``). ``**kw`` then
+        forwards impl / use_cache / prune_chunk / prune_margin."""
+        if prune:
+            return self._top_k_pruned(rs, k, exhaustive=False, **kw)
         d = self.query_batch(rs, **kw)
         idx = self._top_k(d, k)
         return idx, np.take_along_axis(d, idx, axis=-1)
+
+    def top_k_scan_batch(self, rs: Sequence[np.ndarray], k: int = 10,
+                         **kw) -> tuple[np.ndarray, np.ndarray]:
+        """The pruned path's exactness oracle: solve EVERY doc through the
+        same bound-ordered, fixed-shape chunked rerank programs, then
+        select. Bitwise-identical to ``top_k_batch(prune=True)`` by
+        construction of the shared prefix (identical programs on identical
+        inputs) plus bound soundness for the pruned suffix."""
+        return self._top_k_pruned(rs, k, exhaustive=True, **kw)
+
+    # -- two-tier pruned retrieval ---------------------------------------
+
+    def _bounds_for_batch(self, sel_b: np.ndarray,
+                          mask_b: np.ndarray) -> np.ndarray:
+        """(Q_pow2, v_r) padded queries -> (Q_pow2, N) RWMD lower bounds.
+
+        One batched prefilter program: word ids deduped across the whole
+        batch (the K-cache's dedup pattern), M rows computed once per
+        unique id in ``cache_rows_bucket`` chunks, one min-SDDMM over the
+        replicated corpus ELL."""
+        m_pad = rwmd_core.assemble_m_stripes(
+            sel_b, mask_b, self._vecs_d, b2=self._b2,
+            rows_bucket=self.cache_rows_bucket)
+        lb = rwmd_core.rwmd_bound_batch(
+            m_pad, self._ell_cols_d, self._ell_vals_d,
+            impl=self.bound_impl, docs_chunk=self.bound_docs_chunk)
+        return np.asarray(lb)
+
+    def _solve_docs(self, fn, k_s, km_s, r_q, doc_ids: np.ndarray,
+                    chunk: int) -> np.ndarray:
+        """Exact distances of one query against a doc subset via ONE fixed-
+        shape (1, chunk) stripes program. Shorter subsets are padded with
+        ELL pad docs (every slot the shard-local pad id, val 0 -> the
+        engine solves them to 0) and sliced off. Per-doc bits are
+        independent of the chunk-mates and the position in the chunk --
+        the K-cache's fixed-shape-batch reproducibility argument, which is
+        what makes pruned == scan a bitwise statement."""
+        m = doc_ids.size
+        cols = self._rb.cols[:, doc_ids, :]
+        vals = self._rb.vals[:, doc_ids, :]
+        if m < chunk:
+            pad = ((0, 0), (0, chunk - m), (0, 0))
+            cols = np.pad(cols, pad, constant_values=self._rb.num_vocab)
+            vals = np.pad(vals, pad)
+        cols_d = jax.device_put(cols, self._rerank_spec)
+        vals_d = jax.device_put(vals, self._rerank_spec)
+        d = np.asarray(fn(k_s, km_s, r_q, cols_d, vals_d))[0]
+        return d[:m]
+
+    @_serialized
+    def _top_k_pruned(self, rs: Sequence[np.ndarray], k: int, *,
+                      exhaustive: bool, impl: str | None = None,
+                      use_cache: bool | None = None,
+                      prune_chunk: int | None = None,
+                      prune_margin: float | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Shared core of the pruned top-k and its exhaustive-scan oracle.
+
+        Per query: visit docs in ascending-bound order in fixed ``chunk``
+        blocks; solve each block with one (1, chunk) stripes program
+        (precompute via the cross-query K cache); once k docs are solved,
+        drop every doc whose ``bound * (1 - margin)`` exceeds the running
+        k-th exact distance -- ascending order makes the survivors a
+        prefix, so the first empty block ends the query. ``exhaustive``
+        disables the drop (the oracle solves everything, same programs,
+        same order). Docs pruned have exact distance >= bound > threshold
+        *strictly*, so they cannot displace or tie any selected doc.
+        """
+        n = self.ell.num_docs
+        k_eff = min(k, n)
+        if len(rs) == 0:
+            return (np.zeros((0, k_eff), np.int64),
+                    np.zeros((0, k_eff), np.float32))
+        chunk = self._rerank_chunk if prune_chunk is None else \
+            -(-max(prune_chunk, 1) // self._doc_shards) * self._doc_shards
+        margin = self.prune_margin if prune_margin is None else prune_margin
+        q = len(rs)
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        t0 = time.perf_counter()
+        bounds = self._bounds_for_batch(sel_b, mask_b)[:q]
+        t_bound = time.perf_counter() - t0
+        self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
+        use = use_cache is not False
+        fn = self._stripe_fn(impl or self.impl, None)  # chunk IS the block
+        idx_out = np.empty((q, k_eff), np.int64)
+        d_out = np.empty((q, k_eff), np.float32)
+        solves = 0
+        programs = 0
+        hits = misses = 0
+        t0 = time.perf_counter()
+        for i in range(q):
+            k_s, km_s, info = self._kcache.stripes_for_batch(
+                sel_b[i:i + 1], mask_b[i:i + 1], use_cache=use)
+            hits += info["hits"]
+            misses += info["misses"]
+            r_q = jnp.asarray(r_b[i:i + 1])
+            lb = bounds[i]
+            order = np.argsort(lb, kind="stable")      # ascending bounds
+            solved_d = np.full(n, np.inf, np.float32)
+            n_solved = 0
+            threshold = np.inf
+            pos = 0
+            while pos < n:
+                block = order[pos:pos + chunk]
+                if not exhaustive and n_solved >= k_eff:
+                    # bounds ascend within the block, so the survivors are
+                    # its prefix; an empty prefix proves every remaining
+                    # doc is outside the top-k
+                    block = block[lb[block] * (1.0 - margin) <= threshold]
+                    if block.size == 0:
+                        break
+                solved_d[block] = self._solve_docs(fn, k_s, km_s, r_q,
+                                                   block, chunk)
+                solves += block.size
+                programs += 1
+                n_solved += block.size
+                pos += block.size
+                if n_solved >= k_eff:
+                    cur = self._top_k(solved_d, k_eff)
+                    threshold = float(solved_d[cur[-1]])
+            sel = self._top_k(solved_d, k_eff)
+            idx_out[i] = sel
+            d_out[i] = solved_d[sel]
+        t_rerank = time.perf_counter() - t0
+        self.last_prune_stats = {
+            "queries": q, "docs": n, "k": k_eff, "chunk": chunk,
+            "margin": margin, "exhaustive": exhaustive,
+            "exact_solves": solves, "scan_solves": q * n,
+            "solves_avoided": 1.0 - solves / (q * n),
+            "rerank_programs": programs,
+            "bound_s": t_bound, "rerank_s": t_rerank,
+        }
+        # aggregate cache telemetry so coalesced top-k dispatches feed the
+        # same hit-rate passthrough as plain query dispatches
+        total = hits + misses
+        self.last_batch_stats = {
+            "hit_rate": hits / total if total else 0.0,
+            "precompute_s": t_bound, "solve_s": t_rerank,
+        }
+        return idx_out, d_out
