@@ -1,0 +1,219 @@
+"""Perf-regression gate over the BENCH_*.json artifacts (bench.yml).
+
+Compares a fresh bench run against the previous successful nightly run's
+artifacts and fails (exit 1) when a declared headline field regresses by
+more than ``--threshold`` (default 25%):
+
+    python benchmarks/compare_bench.py --prev prev_dir --cur . \
+        [--threshold 0.25] [--out BENCH_trajectory.json] [--summary table.md]
+
+What is gated -- and what deliberately is not
+---------------------------------------------
+Only *ratio and rate* headline fields are declared in ``FIELDS``: qps,
+speedup-vs-baseline ratios, solves-avoided and cache hit-rate fractions.
+Ratios of quantities measured in the same run on the same box largely
+cancel shared-runner drift (the benches measure them interleaved for
+exactly that reason), so a >25% drop is signal, not noise. Absolute wall
+times and tail latencies (p95/p99) on shared CI runners ARE >25% noisy,
+so they ride along in the artifacts and the trajectory but never gate.
+
+Each comparison lands in a markdown delta table (``--summary``, appended
+to ``$GITHUB_STEP_SUMMARY`` in CI) and in ``BENCH_trajectory.json`` -- the
+machine-readable run-over-run record (prev value, current value, delta,
+verdict per field) that accumulates as a per-run artifact.
+
+Missing data never gates spuriously: a field or file absent on either
+side (first run after a rename, a bench that did not run) reports
+``n/a`` and passes -- only a *measured* regression fails the job.
+
+``--self-test`` proves the gate can actually fail: it synthesizes a
+baseline, checks that an identical run passes and that a 30% slowdown on
+every gated field fails, and exits non-zero if either half misbehaves
+(bench.yml runs this before trusting the real comparison).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (artifact file, dotted path into its JSON, direction). direction
+# "higher" = regression when the value drops; "lower" = when it rises.
+FIELDS: list[tuple[str, str, str]] = [
+    ("BENCH_serving.json", "speedup_vs_sequential", "higher"),
+    ("BENCH_serving.json", "saturating.throughput_qps", "higher"),
+    ("BENCH_serving.json", "headlines.throughput_mode.value", "higher"),
+    ("BENCH_serving.json", "offline.throughput_qps", "higher"),
+    ("BENCH_query_batch.json", "points.-1.speedup", "higher"),
+    ("BENCH_zipf_cache.json", "hit_rate_steady", "higher"),
+    ("BENCH_zipf_cache.json", "precompute_speedup_steady", "higher"),
+    ("BENCH_prune.json", "solves_avoided", "higher"),
+    ("BENCH_prune.json", "speedup_vs_scan", "higher"),
+    ("BENCH_prune.json", "speedup_vs_full", "higher"),
+]
+
+
+def get_path(obj, dotted: str):
+    """Resolve a dotted path; integer segments index lists (-1 = last).
+    Returns None when any segment is missing."""
+    for seg in dotted.split("."):
+        try:
+            if isinstance(obj, list):
+                obj = obj[int(seg)]
+            elif isinstance(obj, dict):
+                obj = obj[seg]
+            else:
+                return None
+        except (KeyError, IndexError, ValueError, TypeError):
+            return None
+    return obj if isinstance(obj, (int, float)) else None
+
+
+def load_artifacts(root: str) -> dict[str, dict]:
+    """Read every declared artifact under ``root`` (searching one level of
+    subdirectories too -- artifact downloads often unpack into a folder
+    per artifact name). Missing files simply aren't in the result."""
+    out: dict[str, dict] = {}
+    names = {f for f, _, _ in FIELDS}
+    for name in sorted(names):
+        for cand in [os.path.join(root, name)] + sorted(
+                os.path.join(root, d, name)
+                for d in (os.listdir(root) if os.path.isdir(root) else [])
+                if os.path.isdir(os.path.join(root, d))):
+            if os.path.isfile(cand):
+                try:
+                    with open(cand) as fh:
+                        out[name] = json.load(fh)
+                except (OSError, json.JSONDecodeError) as e:
+                    print(f"warning: unreadable {cand}: {e}",
+                          file=sys.stderr)
+                break
+    return out
+
+
+def compare(prev: dict[str, dict], cur: dict[str, dict],
+            threshold: float) -> dict:
+    """Evaluate every declared field; returns the trajectory record."""
+    rows = []
+    for fname, path, direction in FIELDS:
+        p = get_path(prev.get(fname), path)
+        c = get_path(cur.get(fname), path)
+        row = {"file": fname, "field": path, "direction": direction,
+               "prev": p, "cur": c, "delta_frac": None, "status": "n/a"}
+        if p is not None and c is not None and p > 0:
+            delta = (c - p) / p
+            row["delta_frac"] = delta
+            worse = -delta if direction == "higher" else delta
+            row["status"] = "regression" if worse > threshold else "ok"
+        rows.append(row)
+    regressions = [r for r in rows if r["status"] == "regression"]
+    return {"threshold": threshold, "fields": rows,
+            "regressions": len(regressions),
+            "pass": not regressions}
+
+
+def markdown_table(record: dict) -> str:
+    """The job-summary delta table."""
+    lines = ["### Bench regression gate "
+             f"({'PASS' if record['pass'] else 'FAIL'}, "
+             f"threshold {record['threshold']:.0%})", "",
+             "| metric | prev | current | delta | status |",
+             "|---|---|---|---|---|"]
+    for r in record["fields"]:
+        fmt = lambda v: "n/a" if v is None else f"{v:.3f}"  # noqa: E731
+        delta = ("n/a" if r["delta_frac"] is None
+                 else f"{r['delta_frac']:+.1%}")
+        mark = {"ok": "ok", "n/a": "n/a",
+                "regression": "**REGRESSION**"}[r["status"]]
+        lines.append(f"| {r['file']}:{r['field']} | {fmt(r['prev'])} | "
+                     f"{fmt(r['cur'])} | {delta} | {mark} |")
+    return "\n".join(lines) + "\n"
+
+
+def self_test(threshold: float) -> int:
+    """Prove the gate trips on a synthetic 30% slowdown and stays quiet on
+    an identical run. Exit 0 iff both hold."""
+    base: dict[str, dict] = {}
+    for fname, path, _ in FIELDS:
+        obj = base.setdefault(fname, {})
+        segs = path.split(".")
+        for i, seg in enumerate(segs[:-1]):
+            if segs[i + 1].lstrip("-").isdigit():
+                obj = obj.setdefault(seg, [{}])
+            elif seg.lstrip("-").isdigit():
+                obj = obj[int(seg)]
+            else:
+                obj = obj.setdefault(seg, {})
+        obj[segs[-1]] = 2.0  # every declared path ends in a dict key
+    slow = json.loads(json.dumps(base))
+    for fname, path, direction in FIELDS:
+        segs = path.split(".")
+        obj = slow[fname]
+        for seg in segs[:-1]:
+            obj = obj[int(seg)] if isinstance(obj, list) else obj[seg]
+        factor = 0.7 if direction == "higher" else 1.3  # 30% worse
+        obj[segs[-1]] = obj[segs[-1]] * factor
+
+    ident = compare(base, base, threshold)
+    regress = compare(base, slow, threshold)
+    ok_ident = ident["pass"] and all(r["status"] == "ok"
+                                     for r in ident["fields"])
+    ok_regress = (not regress["pass"]
+                  and all(r["status"] == "regression"
+                          for r in regress["fields"]))
+    print(f"self-test: identical-run pass={ok_ident}, "
+          f"30%-slowdown fails={ok_regress}")
+    if not (ok_ident and ok_regress):
+        print(markdown_table(regress), file=sys.stderr)
+        return 1
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", help="directory with the previous run's "
+                                   "BENCH_*.json (may nest one level)")
+    ap.add_argument("--cur", default=".",
+                    help="directory with the fresh run's BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="regression threshold as a fraction (0.25 = fail "
+                         "on >25%% worse)")
+    ap.add_argument("--out", default="",
+                    help="write the machine-readable trajectory record "
+                         "(BENCH_trajectory.json) here")
+    ap.add_argument("--summary", default="",
+                    help="append the markdown delta table to this file "
+                         "(e.g. $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate logic (synthetic slowdown must "
+                         "fail, identity must pass) and exit")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test(args.threshold)
+    if not args.prev:
+        ap.error("--prev is required (or use --self-test)")
+
+    prev = load_artifacts(args.prev)
+    cur = load_artifacts(args.cur)
+    record = compare(prev, cur, args.threshold)
+    record["prev_files"] = sorted(prev)
+    record["cur_files"] = sorted(cur)
+    table = markdown_table(record)
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as fh:
+            fh.write(table + "\n")
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(record, fh, indent=2)
+        print(f"# wrote {args.out}")
+    if not record["pass"]:
+        print(f"::error::{record['regressions']} bench headline(s) "
+              f"regressed by more than {args.threshold:.0%}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,6 +7,8 @@
         --coalesce --clients 8
     PYTHONPATH=src python examples/wmd_query_service.py \
         --top-k 8 --prune --docs 1024
+    PYTHONPATH=src python examples/wmd_query_service.py \
+        --offline 256 --top-k 8 --prune --cache-dir /tmp/wmd-jax-cache
 
 Loads a corpus once onto the mesh (vocab-striped K + doc-sharded ELL),
 then serves a stream of queries (bucketed by padded v_r, one psum per
@@ -33,7 +35,19 @@ coalescer micro-batches them into full `query_batch` dispatches -- the
 batch-size histogram and client-side latency percentiles it prints are the
 whole story (fill-triggered batches under load, window flushes at the
 tail). Combine with --cache-capacity to watch the cross-query K cache's
-hit rate ride along in the same report.
+hit rate ride along in the same report. Warmup now runs through the AOT
+program-shape registry (`serving.warmup.ShapeRegistry`): every pow2 Q
+bucket the coalescer can dispatch is precompiled before the first client
+arrives, so no request ever pays a first-hit compile.
+
+--offline N demos the bulk-scoring mode (`serving.offline.run_offline`):
+N Zipf queries scored at maximum batch occupancy -- no admission windows,
+pure throughput, the MLPerf offline scenario. With --top-k it uses union
+rerank batching (one (Q, chunk) rerank program per candidate block for
+the whole batch) and verifies the answer bitwise against the exhaustive
+scan. Add --cache-dir DIR to persist compiled programs across processes:
+the second run of the same command starts with zero backend compiles
+(the production knob behind `launch/serve.py --warmup --cache-dir`).
 """
 import argparse
 import os
@@ -77,6 +91,14 @@ def main():
                          "against the exact scan)")
     ap.add_argument("--prune-chunk", type=int, default=64,
                     help="doc-block size of the pruned rerank")
+    ap.add_argument("--offline", type=int, default=0, metavar="N",
+                    help="> 0: bulk-score N Zipf queries at max batch "
+                         "occupancy (combine with --top-k/--prune for "
+                         "union-rerank retrieval, verified vs the scan)")
+    ap.add_argument("--cache-dir", default="",
+                    help="persist jax-compiled programs here; a second "
+                         "run of the same shapes starts with zero "
+                         "backend compiles")
     args = ap.parse_args()
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -89,6 +111,12 @@ def main():
     from repro.data import make_corpus
     from repro.launch.mesh import make_mesh
     from repro.serving import WMDService
+
+    if args.cache_dir:
+        # must be on before the first compile; programs are persisted
+        # eagerly, keyed by (HLO, jaxlib, flags)
+        from repro.serving import enable_compilation_cache
+        enable_compilation_cache(args.cache_dir)
 
     n_dev = len(jax.devices())
     model_par = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
@@ -107,9 +135,42 @@ def main():
                      prune_chunk=args.prune_chunk,
                      cache_capacity=(args.cache_capacity
                                      if args.zipf_stream or args.coalesce
-                                     or args.top_k else 0))
+                                     or args.top_k or args.offline else 0))
     print(f"corpus loaded+sharded in {time.perf_counter() - t0:.2f}s "
           f"(nnz={data.nnz})")
+
+    if args.offline:
+        # bulk-scoring mode: the whole workload is known up front, so the
+        # scheduler is trivial and maximal -- full buckets, 100% occupancy.
+        # Warmup first (registry pass), so the timed run never compiles;
+        # with --cache-dir a SECOND process run reports 0 compiles here.
+        from repro.data import zipf_query_stream
+        from repro.serving import ShapeRegistry, run_offline, warm
+        stream = zipf_query_stream(vocab_size=cfg.vocab_size,
+                                   query_words=13, s=1.3, seed=0)
+        qs = [next(stream) for _ in range(args.offline)]
+        max_batch = 16
+        kinds = ("plain",) if not args.top_k else ("top_k_union",)
+        reg = ShapeRegistry.from_service(
+            svc, max_batch=max_batch,
+            ks=(args.top_k,) if args.top_k else (), kinds=kinds)
+        rep = warm(svc, reg)
+        print(f"warmup: {len(reg)} shapes, {rep.compiles} compiles "
+              f"({rep.compile_s:.2f}s), {rep.persistent_hits} persisted-"
+              f"cache hits in {rep.wall_s:.2f}s")
+        off = run_offline(svc, qs,
+                          k=args.top_k or None, max_batch=max_batch)
+        print(f"offline: {off.n} queries in {off.batches} batches, "
+              f"{off.throughput_qps:.1f} q/s")
+        if args.top_k and args.prune:
+            idx_s, d_s = svc.top_k_scan_batch(qs, args.top_k)
+            exact = (np.array_equal(off.topk_idx, idx_s)
+                     and np.array_equal(off.topk_dist, d_s))
+            print(f"  union rerank: {off.rerank_programs} programs, "
+                  f"solves avoided {off.solves_avoided:.1%}, "
+                  f"bitwise-identical to the exact scan: {exact}")
+            assert exact, "offline top-k must equal the exact scan"
+        return
 
     if args.top_k:
         # two-tier retrieval: RWMD prefilter + exact Sinkhorn rerank. The
@@ -160,7 +221,9 @@ def main():
         with svc.async_service(window_ms=args.coalesce_window_ms,
                                max_batch=max_batch,
                                max_queue=4 * max_batch) as co:
-            co.warm(qs)              # compile each pow2 bucket up front
+            rep = co.warm_registry(queries=qs)   # AOT: every pow2 bucket
+            print(f"  warmed {len(rep.shapes)} shapes "
+                  f"({rep.compiles} compiles, {rep.compile_s:.2f}s)")
             res = closed_loop(co.submit, qs, concurrency=args.clients)
             st = co.stats()
         print(f"coalesce: {args.clients} clients x "

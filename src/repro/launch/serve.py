@@ -10,8 +10,25 @@ service micro-batches an asynchronous stream of Zipf queries (open-loop
 Poisson arrivals at ``--rate-qps``, or back-to-back submits when 0), with
 ``--max-queue`` backpressure and optional per-request ``--deadline-ms``
 budgets. Ctrl-C is safe: the loop drains the queue and in-flight batch
-before exiting, and the `ServingStats` report (batch-size histogram,
-dispatch triggers, latency percentiles) always prints on the way out.
+before exiting, the `ServingStats` report (batch-size histogram, dispatch
+triggers, latency percentiles) always prints on the way out, and with
+``--cache-dir`` the persisted compilation cache's state is reported too.
+
+Startup / batch extensions (ROADMAP item 3):
+
+* ``--cache-dir DIR`` points jax's persistent compilation cache at DIR, so
+  a restarted server (or a CI job restoring DIR) skips every XLA backend
+  compile it has seen before -- pair with ``--warmup``.
+* ``--warmup`` precompiles the full serving envelope before any traffic:
+  every pow2 Q bucket x request kind the flags imply, via the
+  `serving.warmup` shape registry (the serving loop always warms; the flag
+  makes the one-shot and offline paths warm too, and prints the per-shape
+  compile report).
+* ``--offline QUERIES.npz [--offline-out OUT.npz]`` runs the offline
+  bulk-scoring mode instead of serving: the query file streams through the
+  engine at maximum batch occupancy (no windows/deadlines), top-k reranks
+  batched across the batch (union rerank), output bitwise identical to the
+  online path on the same queries.
 """
 import argparse
 import os
@@ -66,6 +83,28 @@ def main():
                          "(0 = submit back-to-back, saturating)")
     ap.add_argument("--requests", type=int, default=64,
                     help="serving loop: total queries to serve")
+    ap.add_argument("--warmup", action="store_true",
+                    help="sinkhorn-wmd: precompile the full serving "
+                         "envelope (pow2 Q buckets x request kinds) via "
+                         "the shape registry before any query runs, and "
+                         "print the per-shape compile report")
+    ap.add_argument("--cache-dir", default="",
+                    help="sinkhorn-wmd: persist jax's compilation cache "
+                         "here -- a restart (or a CI job restoring the "
+                         "directory) skips every XLA compile it has seen")
+    ap.add_argument("--offline", default="", metavar="QUERIES",
+                    help="sinkhorn-wmd: offline bulk-scoring mode -- "
+                         "stream this query file (.npz/.npy, (n, V)) at "
+                         "maximum batch occupancy instead of serving; "
+                         "with --top-k, reranks use union batching")
+    ap.add_argument("--offline-out", default="", metavar="OUT",
+                    help="offline mode: write the scored outputs (npz) "
+                         "here")
+    ap.add_argument("--rerank", default="union",
+                    choices=("union", "per_query"),
+                    help="offline mode: rerank batching strategy (both "
+                         "are bitwise-identical; union runs (Q, chunk) "
+                         "programs instead of Q x (1, chunk))")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     args = ap.parse_args()
@@ -92,7 +131,11 @@ def main():
     if args.arch == "sinkhorn-wmd":
         from repro.configs import sinkhorn_wmd as wmd_cfg
         from repro.data import make_corpus
-        from repro.serving import WMDService
+        from repro.serving import WMDService, enable_compilation_cache
+        if args.cache_dir:
+            # before the service exists: every compile from here on is
+            # persisted / looked up in the cache directory
+            enable_compilation_cache(args.cache_dir)
         cfg = wmd_cfg.smoke_config() if args.smoke else wmd_cfg.config()
         data = make_corpus(vocab_size=cfg.vocab_size,
                            embed_dim=cfg.embed_dim, num_docs=cfg.num_docs,
@@ -102,6 +145,11 @@ def main():
                          impl=args.impl,
                          docs_chunk=args.docs_chunk or None,
                          tol=args.tol)
+        if args.offline:
+            _serve_wmd_offline(svc, args)
+            return
+        if args.warmup and args.coalesce_window_ms <= 0:
+            _warmup_wmd(svc, args)     # the serving loop warms on its own
         if args.coalesce_window_ms > 0:
             _serve_wmd_loop(svc, cfg, args)
             return
@@ -186,6 +234,60 @@ def main():
           f"({dt / args.decode_steps * 1e3:.2f} ms/tok)")
 
 
+def _warmup_wmd(svc, args, *, max_batch: int | None = None):
+    """Registry warmup for the one-shot / offline paths; prints the report
+    (the serving loop records the same data into ServingStats instead)."""
+    ks = (args.top_k,) if args.top_k else ()
+    kinds = None
+    if args.offline and args.top_k:
+        # the offline driver dispatches union-rerank programs, a shape the
+        # online coalescer never cuts -- warm it explicitly
+        kinds = ("plain", "top_k", "top_k_union")
+    report = svc.warmup(max_batch=max_batch or args.max_batch, ks=ks,
+                        kinds=kinds)
+    print(f"[serve-wmd] warmup: {len(report.registry)} shapes in "
+          f"{report.wall_s:.2f}s, {report.compiles} compiles "
+          f"({report.compile_s:.2f}s), {report.persistent_hits} from the "
+          f"persisted cache ({report.retrieval_s:.2f}s)")
+    return report
+
+
+def _report_cache_flush():
+    """Print the persisted compilation cache's on-disk state (exit paths:
+    normal return and SIGINT both land here), so an interrupted run still
+    reports the warm cache it leaves for the next start."""
+    from repro.serving import flush_compilation_cache
+    info = flush_compilation_cache()
+    if info:
+        print(f"[serve-wmd] compilation cache: {info['entries']} entries "
+              f"({info['bytes'] / 1e3:.0f} kB) persisted at {info['dir']}")
+
+
+def _serve_wmd_offline(svc, args):
+    """Offline bulk-scoring: query file -> full-occupancy batches -> npz."""
+    from repro.serving import load_query_file, run_offline
+    qs = load_query_file(args.offline)
+    if args.warmup:
+        _warmup_wmd(svc, args)
+    try:
+        res = run_offline(svc, qs, k=args.top_k or None,
+                          max_batch=args.max_batch, rerank=args.rerank,
+                          impl=args.impl)
+        msg = (f"[serve-wmd] offline {res.mode}: {res.n} queries in "
+               f"{res.batches} batches of <= {res.max_batch}, "
+               f"{res.wall_s:.2f}s ({res.throughput_qps:.1f} q/s)")
+        if res.mode == "top_k":
+            msg += f", rerank={res.rerank}"
+            if res.solves_avoided is not None:
+                msg += f", solves avoided {res.solves_avoided:.1%}"
+            msg += f", {res.rerank_programs} rerank programs"
+        print(msg)
+        if args.offline_out:
+            print(f"[serve-wmd] wrote {res.save(args.offline_out)}")
+    finally:
+        _report_cache_flush()
+
+
 def _serve_wmd_loop(svc, cfg, args):
     """Async serving loop: Zipf stream -> QueryCoalescer -> query_batch.
 
@@ -206,14 +308,17 @@ def _serve_wmd_loop(svc, cfg, args):
                            max_batch=args.max_batch,
                            max_queue=args.max_queue,
                            default_deadline_ms=args.deadline_ms or None)
+    # registry warmup: one pass compiles every shape this coalescer can
+    # dispatch (pow2 buckets x kinds), so no live dispatch pays compile
+    # time; per-shape compile seconds land in ServingStats
+    rep = co.warm_registry(ks=(args.top_k,) if args.top_k else (),
+                           queries=qs)
+    print(f"[serve-wmd] warmup: {len(rep.registry)} shapes, "
+          f"{rep.compiles} compiles ({rep.compile_s:.2f}s), "
+          f"{rep.persistent_hits} persisted-cache hits")
     if args.top_k:
-        # compile the pruned engine's programs for every pow2 bucket this
-        # coalescer can cut (the bound program is shaped per bucket), so
-        # no live top-k dispatch pays compile time
-        co.warm_top_k(qs, args.top_k)
         submit = lambda r: co.submit_top_k(r, args.top_k)   # noqa: E731
     else:
-        co.warm(qs)            # compile every pow2 bucket outside serving
         submit = co.submit
     print(f"[serve-wmd] serving loop: {args.requests} zipf queries"
           + (f" (top-{args.top_k} pruned)" if args.top_k else "") + ", "
@@ -260,6 +365,8 @@ def _serve_wmd_loop(svc, cfg, args):
               f"deadline_misses={st.deadline_misses}"
               + (f" hit_rate={st.hit_rate:.2f}"
                  if st.hit_rate is not None else ""))
+        # SIGINT lands here too: leave the persisted cache state on record
+        _report_cache_flush()
 
 
 if __name__ == "__main__":

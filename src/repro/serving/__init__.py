@@ -1,11 +1,23 @@
-"""Serving substrate: sharded prefill/decode, the WMD query service, and the
-async admission layer (request coalescer + load generators)."""
+"""Serving substrate: sharded prefill/decode, the WMD query service, the
+async admission layer (request coalescer + load generators), AOT program
+warmup, and the offline bulk-scoring driver."""
 from repro.serving.coalescer import (CoalescerClosedError, QueryCoalescer,
                                      QueueFullError, ServingStats)
 from repro.serving.loadgen import LoadgenResult, closed_loop, open_loop
+from repro.serving.offline import (OfflineResult, load_query_file,
+                                   run_offline, save_query_file)
 from repro.serving.serve_step import build_serve_fns
+from repro.serving.warmup import (ProgramShape, ShapeRegistry, WarmupReport,
+                                  enable_compilation_cache,
+                                  flush_compilation_cache, measure_compiles,
+                                  warm)
 from repro.serving.wmd_service import WMDService
 
 __all__ = ["build_serve_fns", "WMDService", "QueryCoalescer",
            "ServingStats", "QueueFullError", "CoalescerClosedError",
-           "LoadgenResult", "open_loop", "closed_loop"]
+           "LoadgenResult", "open_loop", "closed_loop",
+           "ProgramShape", "ShapeRegistry", "WarmupReport", "warm",
+           "enable_compilation_cache", "flush_compilation_cache",
+           "measure_compiles",
+           "OfflineResult", "run_offline", "load_query_file",
+           "save_query_file"]

@@ -134,6 +134,10 @@ class ServingStats:
     latency_ms_p99: float
     hit_rate: float | None        # mean per-dispatch cache hit rate
     service_estimate_ms: float    # EWMA dispatch wall time (deadline trigger)
+    # registry warmup (serving.warmup): shapes precompiled before serving and
+    # the per-shape compile seconds -- None until record_warmup() is called
+    warmed_shapes: int = 0
+    warmup_compile_s: dict[str, float] | None = None
 
 
 @dataclasses.dataclass
@@ -238,7 +242,14 @@ class QueryCoalescer:
         # EWMA would make plain deadlines fire absurdly early (degenerate
         # batch-of-1 cuts) and top-k deadlines far too late
         self._service_est_kind: dict[bool, float] = {}
+        self._warmed_shapes = 0
+        self._warmup_compile_s: dict[str, float] | None = None
         self.batch_log: collections.deque[tuple[int, ...]] = \
+            collections.deque(maxlen=batch_log_size)
+        # (kind, Q, k) of recent dispatches: the program-shape counterpart
+        # of batch_log, cross-checked against the warmup ShapeRegistry by
+        # tests/test_warmup.py (every dispatched shape must be registered)
+        self.shape_log: collections.deque[tuple[str, int, int | None]] = \
             collections.deque(maxlen=batch_log_size)
 
         self._thread = threading.Thread(target=self._run,
@@ -315,29 +326,50 @@ class QueryCoalescer:
         """Enqueue several queries in order (same kwargs as `submit`)."""
         return [self.submit(r, **kw) for r in rs]
 
+    def warm_registry(self, *, ks: Sequence[int] = (),
+                      kinds: Sequence[str] | None = None,
+                      queries: Sequence[np.ndarray] | None = None,
+                      seed: int = 0):
+        """Precompile every program shape this coalescer can dispatch --
+        pow2 Q buckets up to ``max_batch`` x kinds ("plain", plus "top_k"
+        per k in ``ks``) -- via the `serving.warmup` shape registry, on the
+        caller's thread. Call once before serving so no live dispatch pays
+        compile time (first dispatches otherwise include it, which also
+        skews the deadline trigger's service-time EWMA). Per-shape compile
+        times are recorded and surface in `ServingStats.warmup_compile_s`.
+        Returns the `WarmupReport`."""
+        from repro.serving import warmup as _warmup
+        registry = _warmup.ShapeRegistry.from_service(
+            self.svc, max_batch=self.max_batch, ks=ks, kinds=kinds)
+        report = _warmup.warm(self.svc, registry, queries=queries, seed=seed)
+        self.record_warmup(report)
+        return report
+
+    def record_warmup(self, report) -> None:
+        """Fold a `serving.warmup.WarmupReport` into the stats snapshot
+        (idempotent per shape: repeated warmups merge by shape label)."""
+        compile_s = report.compile_s_by_label()
+        with self._lock:
+            merged = dict(self._warmup_compile_s or {})
+            merged.update(compile_s)
+            self._warmup_compile_s = merged
+            self._warmed_shapes = len(merged)
+
     def warm(self, qs: Sequence[np.ndarray]) -> None:
-        """Compile every pow2 Q bucket this coalescer can cut by running
-        ``svc.query_batch`` directly on the caller's thread -- call once
-        before serving so no live dispatch pays compile time (first
-        dispatches otherwise include it, which also skews the deadline
-        trigger's service-time EWMA)."""
-        b = 1
-        while qs and b <= self.max_batch:
-            self.svc.query_batch(list(qs[:b]))
-            if b >= len(qs):        # shorter qs can't fill bigger buckets
-                break
-            b *= 2
+        """Deprecated shim: forwards to `warm_registry` (the one warmup
+        code path). Compiles every plain pow2 Q bucket up to ``max_batch``;
+        unlike the old ad-hoc loop, a short ``qs`` no longer truncates the
+        bucket ladder (the registry pass cycles the queries to fill every
+        bucket)."""
+        if qs:
+            self.warm_registry(queries=qs)
 
     def warm_top_k(self, qs: Sequence[np.ndarray], k: int) -> None:
-        """Top-k twin of `warm`: compile the pruned engine's programs (the
-        per-pow2-bucket bound program + the shared rerank chunk program)
-        before serving, so no live top-k dispatch pays compile time."""
-        b = 1
-        while qs and b <= self.max_batch:
-            self.svc.top_k_batch(list(qs[:b]), k, prune=True)
-            if b >= len(qs):
-                break
-            b *= 2
+        """Deprecated shim: forwards to `warm_registry` (top-k kind only),
+        compiling the pruned engine's programs -- the per-pow2-bucket bound
+        program + the shared rerank chunk program -- for this ``k``."""
+        if qs:
+            self.warm_registry(ks=(int(k),), kinds=("top_k",), queries=qs)
 
     # -- lifecycle --------------------------------------------------------
 
@@ -413,6 +445,9 @@ class QueryCoalescer:
             hit_rate = (self._hit_rate_sum / self._hit_rate_n
                         if self._hit_rate_n else None)
             est_ms = self._service_est_s * 1e3
+            warmed = self._warmed_shapes
+            warm_s = (dict(self._warmup_compile_s)
+                      if self._warmup_compile_s is not None else None)
         lat = np.asarray(lat_snap, np.float64) * 1e3
         n_disp = sum(counts.values())
         total_in_batches = sum(q * c for q, c in hist.items())
@@ -432,7 +467,9 @@ class QueryCoalescer:
             latency_ms_p95=pct(95),
             latency_ms_p99=pct(99),
             hit_rate=hit_rate,
-            service_estimate_ms=est_ms)
+            service_estimate_ms=est_ms,
+            warmed_shapes=warmed,
+            warmup_compile_s=warm_s)
 
     # -- dispatcher -------------------------------------------------------
 
@@ -575,6 +612,9 @@ class QueryCoalescer:
             self._dispatch_counts[cause] += 1
             self._batch_hist[len(batch)] += 1
             self.batch_log.append(tuple(rq.seq for rq in batch))
+            self.shape_log.append(
+                ("plain" if batch[0].k is None else "top_k",
+                 len(batch), batch[0].k))
             for rq in batch:
                 if err is None:
                     self._completed += 1

@@ -424,7 +424,7 @@ class WMDService:
         return idx, d[idx]
 
     def top_k_batch(self, rs: Sequence[np.ndarray], k: int = 10, *,
-                    prune: bool = False,
+                    prune: bool = False, rerank: str = "per_query",
                     **kw) -> tuple[np.ndarray, np.ndarray]:
         """Batched nearest-k: (Q, k) doc ids + distances.
 
@@ -435,8 +435,26 @@ class WMDService:
         Sinkhorn rerank only on the candidate prefix -- and returns the
         bitwise-identical set as `top_k_scan_batch` while skipping the
         pruned docs' solves (stats in ``last_prune_stats``). ``**kw`` then
-        forwards impl / use_cache / prune_chunk / prune_margin."""
+        forwards impl / use_cache / prune_chunk / prune_margin.
+
+        ``rerank`` picks the pruned rerank strategy: ``"per_query"`` (the
+        online default -- each query visits its own candidate blocks with
+        (1, chunk) programs) or ``"union"`` (the offline bulk strategy --
+        all Q queries rerank shared candidate blocks with ONE (Q, chunk)
+        program per block, so correlated batches pay ~1/Q the program
+        dispatches). Both return the bitwise-identical set: every solved
+        (query, doc) distance comes from the same fixed-shape program
+        family, and both prune only docs provably outside the top-k (see
+        `_top_k_union`)."""
+        if rerank not in ("per_query", "union"):
+            raise ValueError(f"rerank must be per_query|union, "
+                             f"got {rerank!r}")
+        if rerank == "union" and not prune:
+            raise ValueError("rerank='union' is a pruned-rerank strategy; "
+                             "pass prune=True")
         if prune:
+            if rerank == "union":
+                return self._top_k_union(rs, k, **kw)
             return self._top_k_pruned(rs, k, exhaustive=False, **kw)
         d = self.query_batch(rs, **kw)
         idx = self._top_k(d, k)
@@ -471,13 +489,17 @@ class WMDService:
 
     def _solve_docs(self, fn, k_s, km_s, r_q, doc_ids: np.ndarray,
                     chunk: int) -> np.ndarray:
-        """Exact distances of one query against a doc subset via ONE fixed-
-        shape (1, chunk) stripes program. Shorter subsets are padded with
-        ELL pad docs (every slot the shard-local pad id, val 0 -> the
-        engine solves them to 0) and sliced off. Per-doc bits are
-        independent of the chunk-mates and the position in the chunk --
-        the K-cache's fixed-shape-batch reproducibility argument, which is
-        what makes pruned == scan a bitwise statement."""
+        """Exact distances of the stripes batch against a doc subset via
+        ONE fixed-shape (Q, chunk) stripes program (Q = 1 on the per-query
+        rerank path, the pow2 batch on the union path). Shorter subsets are
+        padded with ELL pad docs (every slot the shard-local pad id, val 0
+        -> the engine solves them to 0) and sliced off. Per-doc bits are
+        independent of the chunk-mates, the position in the chunk, AND the
+        Q-mates in the batch (each (q, doc) cell reduces over its own nnz /
+        v_r axes only) -- the K-cache's fixed-shape-batch reproducibility
+        argument extended across Q, which is what makes pruned == scan ==
+        union-reranked a bitwise statement (pinned by tests/test_warmup.py
+        and the rwmd property suite)."""
         m = doc_ids.size
         cols = self._rb.cols[:, doc_ids, :]
         vals = self._rb.vals[:, doc_ids, :]
@@ -487,8 +509,8 @@ class WMDService:
             vals = np.pad(vals, pad)
         cols_d = jax.device_put(cols, self._rerank_spec)
         vals_d = jax.device_put(vals, self._rerank_spec)
-        d = np.asarray(fn(k_s, km_s, r_q, cols_d, vals_d))[0]
-        return d[:m]
+        d = np.asarray(fn(k_s, km_s, r_q, cols_d, vals_d))
+        return d[:, :m]
 
     @_serialized
     def _top_k_pruned(self, rs: Sequence[np.ndarray], k: int, *,
@@ -553,7 +575,7 @@ class WMDService:
                     if block.size == 0:
                         break
                 solved_d[block] = self._solve_docs(fn, k_s, km_s, r_q,
-                                                   block, chunk)
+                                                   block, chunk)[0]
                 solves += block.size
                 programs += 1
                 n_solved += block.size
@@ -568,6 +590,7 @@ class WMDService:
         self.last_prune_stats = {
             "queries": q, "docs": n, "k": k_eff, "chunk": chunk,
             "margin": margin, "exhaustive": exhaustive,
+            "rerank": "per_query",
             "exact_solves": solves, "scan_solves": q * n,
             "solves_avoided": 1.0 - solves / (q * n),
             "rerank_programs": programs,
@@ -581,3 +604,129 @@ class WMDService:
             "precompute_s": t_bound, "solve_s": t_rerank,
         }
         return idx_out, d_out
+
+    @_serialized
+    def _top_k_union(self, rs: Sequence[np.ndarray], k: int, *,
+                     impl: str | None = None,
+                     use_cache: bool | None = None,
+                     prune_chunk: int | None = None,
+                     prune_margin: float | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Union rerank: the offline bulk-scoring strategy for correlated
+        query batches -- one (Q, chunk) stripes program per candidate
+        block instead of Q separate (1, chunk) programs.
+
+        All Q queries share one block schedule: among docs still *needed*
+        by at least one query, visit the lowest min-over-queries bound
+        first, and every program solves the block for the whole batch (the
+        rows a query did not ask for are free -- the program's cost is set
+        by its shape). A doc is needed by query q until q has k exact
+        distances and ``bound_q(doc) * (1 - margin) > threshold_q`` (the
+        same sound prune test as the per-query path); thresholds only
+        tighten and solved counts only grow, so "needed" is monotone
+        decreasing and the loop ends at the first round with no needed doc.
+
+        Bitwise identity with the per-query rerank (and hence with
+        `top_k_scan_batch`) rests on three facts, each pinned by tests:
+        (1) every solved (query, doc) distance is bit-identical across
+        program shapes -- the stripes engine's per-cell contractions never
+        cross the Q or chunk axes; (2) the K-cache assembles bit-identical
+        stripe rows regardless of batch composition; (3) pruning is sound
+        and *strict* -- a skipped doc has exact distance > the running
+        threshold >= the true k-th distance, so it can neither enter nor
+        tie into the top-k, and extra docs the union schedule solves that
+        the per-query path pruned change nothing for the same reason.
+        """
+        n = self.ell.num_docs
+        k_eff = min(k, n)
+        if len(rs) == 0:
+            return (np.zeros((0, k_eff), np.int64),
+                    np.zeros((0, k_eff), np.float32))
+        chunk = self._rerank_chunk if prune_chunk is None else \
+            -(-max(prune_chunk, 1) // self._doc_shards) * self._doc_shards
+        margin = self.prune_margin if prune_margin is None else prune_margin
+        q = len(rs)
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        t0 = time.perf_counter()
+        lb = self._bounds_for_batch(sel_b, mask_b)[:q]        # (q, N)
+        t_bound = time.perf_counter() - t0
+        self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
+        use = use_cache is not False
+        fn = self._stripe_fn(impl or self.impl, None)
+        # ONE stripes assembly for the whole batch (vs per-query on the
+        # online path) -- rows are bit-reproducible either way
+        k_s, km_s, info = self._kcache.stripes_for_batch(sel_b, mask_b,
+                                                         use_cache=use)
+        r_all = jnp.asarray(r_b)                  # (Q_pow2, v_r)
+        min_lb = lb.min(axis=0)                   # union visit order key
+        solved_d = np.full((q, n), np.inf, np.float32)
+        unsolved = np.ones(n, bool)
+        thresholds = np.full(q, np.inf, np.float32)
+        n_solved = 0
+        programs = 0
+        t0 = time.perf_counter()
+        while True:
+            if n_solved >= k_eff:
+                need = unsolved & (lb * (1.0 - margin)
+                                   <= thresholds[:, None]).any(axis=0)
+            else:
+                # until every query has k exact distances, every unsolved
+                # doc is a candidate (thresholds are still +inf)
+                need = unsolved
+            cand = np.nonzero(need)[0]
+            if cand.size == 0:
+                break
+            block = cand[np.argsort(min_lb[cand], kind="stable")][:chunk]
+            solved_d[:, block] = self._solve_docs(fn, k_s, km_s, r_all,
+                                                  block, chunk)[:q]
+            unsolved[block] = False
+            programs += 1
+            n_solved += block.size
+            if n_solved >= k_eff:
+                for i in range(q):
+                    cur = self._top_k(solved_d[i], k_eff)
+                    thresholds[i] = solved_d[i][cur[-1]]
+        t_rerank = time.perf_counter() - t0
+        idx_out = np.empty((q, k_eff), np.int64)
+        d_out = np.empty((q, k_eff), np.float32)
+        for i in range(q):
+            sel = self._top_k(solved_d[i], k_eff)
+            idx_out[i] = sel
+            d_out[i] = solved_d[i][sel]
+        solves = q * (n - int(unsolved.sum()))
+        self.last_prune_stats = {
+            "queries": q, "docs": n, "k": k_eff, "chunk": chunk,
+            "margin": margin, "exhaustive": False,
+            "rerank": "union",
+            "exact_solves": solves, "scan_solves": q * n,
+            "solves_avoided": 1.0 - solves / (q * n),
+            "rerank_programs": programs,
+            "bound_s": t_bound, "rerank_s": t_rerank,
+        }
+        self.last_batch_stats = {
+            "hit_rate": info.get("hit_rate", 0.0),
+            "precompute_s": t_bound, "solve_s": t_rerank,
+        }
+        return idx_out, d_out
+
+    # -- ahead-of-time warmup ---------------------------------------------
+
+    def warmup(self, *, max_batch: int = 16, ks: Sequence[int] = (),
+               kinds: Sequence[str] | None = None,
+               queries: Sequence[np.ndarray] | None = None,
+               seed: int = 0):
+        """Precompile the full serving envelope (`serving.warmup`).
+
+        Enumerates every program shape this service can be dispatched --
+        pow2 Q buckets up to ``max_batch`` x request kinds ("plain", plus
+        "top_k" per k in ``ks``; pass ``kinds`` to add the offline mode's
+        "top_k_union") -- and runs one dispatch per shape, so a following
+        serving session never meets a first-hit XLA compile. Combine with
+        `serving.warmup.enable_compilation_cache` to persist the compiled
+        programs across processes. Returns the `WarmupReport` (per-shape
+        compile times; hand it to `QueryCoalescer.record_warmup` to
+        surface in `ServingStats`)."""
+        from repro.serving import warmup as _warmup
+        registry = _warmup.ShapeRegistry.from_service(
+            self, max_batch=max_batch, ks=ks, kinds=kinds)
+        return _warmup.warm(self, registry, queries=queries, seed=seed)

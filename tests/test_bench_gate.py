@@ -1,0 +1,187 @@
+"""The CI perf-regression gate (benchmarks/compare_bench.py): a synthetic
+slowdown past the threshold must FAIL, identity and missing baselines must
+PASS, and the trajectory record / delta table must say which is which.
+
+The gate guards the nightly bench headlines, so its failure semantics are
+themselves pinned here -- a gate that can't fail (or fails on a missing
+first-run baseline) is worse than no gate.
+"""
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SCRIPT = os.path.join(_ROOT, "benchmarks", "compare_bench.py")
+
+
+@pytest.fixture(scope="module")
+def gate():
+    spec = importlib.util.spec_from_file_location("compare_bench", _SCRIPT)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _baseline(gate, value=2.0):
+    """Artifacts holding ``value`` at every declared field path."""
+    arts: dict = {}
+    for fname, path, _ in gate.FIELDS:
+        obj = arts.setdefault(fname, {})
+        segs = path.split(".")
+        for i, seg in enumerate(segs[:-1]):
+            if segs[i + 1].lstrip("-").isdigit():
+                obj = obj.setdefault(seg, [{}])
+            elif seg.lstrip("-").isdigit():
+                obj = obj[int(seg)]
+            else:
+                obj = obj.setdefault(seg, {})
+        obj[segs[-1]] = value
+    return arts
+
+
+def test_get_path_dotted_and_list_indexing(gate):
+    obj = {"a": {"b": [{"c": 1.5}, {"c": 2.5}]}}
+    assert gate.get_path(obj, "a.b.0.c") == 1.5
+    assert gate.get_path(obj, "a.b.-1.c") == 2.5
+    assert gate.get_path(obj, "a.missing.c") is None
+    assert gate.get_path(obj, "a.b.9.c") is None
+    assert gate.get_path({"s": "text"}, "s") is None   # non-numeric leaf
+    assert gate.get_path(None, "a") is None
+
+
+def test_identity_run_passes(gate):
+    base = _baseline(gate)
+    rec = gate.compare(base, base, 0.25)
+    assert rec["pass"] and rec["regressions"] == 0
+    assert all(r["status"] == "ok" for r in rec["fields"])
+    assert all(r["delta_frac"] == 0.0 for r in rec["fields"])
+
+
+def test_synthetic_30pct_slowdown_fails(gate):
+    base = _baseline(gate)
+    slow = json.loads(json.dumps(base))
+    for fname, path, direction in gate.FIELDS:
+        segs = path.split(".")
+        obj = slow[fname]
+        for seg in segs[:-1]:
+            obj = obj[int(seg)] if isinstance(obj, list) else obj[seg]
+        obj[segs[-1]] *= 0.7 if direction == "higher" else 1.3
+    rec = gate.compare(base, slow, 0.25)
+    assert not rec["pass"]
+    assert rec["regressions"] == len(gate.FIELDS)
+    # ... and a 20% dip stays inside the 25% envelope
+    mild = json.loads(json.dumps(base))
+    for fname, path, direction in gate.FIELDS:
+        segs = path.split(".")
+        obj = mild[fname]
+        for seg in segs[:-1]:
+            obj = obj[int(seg)] if isinstance(obj, list) else obj[seg]
+        obj[segs[-1]] *= 0.8 if direction == "higher" else 1.2
+    assert gate.compare(base, mild, 0.25)["pass"]
+
+
+def test_missing_baseline_is_lenient(gate):
+    base = _baseline(gate)
+    rec = gate.compare({}, base, 0.25)      # no previous artifacts at all
+    assert rec["pass"]
+    assert all(r["status"] == "n/a" for r in rec["fields"])
+    # one missing file, one missing field: only those go n/a
+    partial = json.loads(json.dumps(base))
+    first = gate.FIELDS[0][0]
+    del partial[first]
+    rec = gate.compare(partial, base, 0.25)
+    assert rec["pass"]
+    statuses = {r["file"]: r["status"] for r in rec["fields"]}
+    assert statuses[first] == "n/a"
+
+
+def test_improvement_never_gates(gate):
+    base = _baseline(gate)
+    fast = json.loads(json.dumps(base))
+    for fname, path, direction in gate.FIELDS:
+        segs = path.split(".")
+        obj = fast[fname]
+        for seg in segs[:-1]:
+            obj = obj[int(seg)] if isinstance(obj, list) else obj[seg]
+        obj[segs[-1]] *= 3.0 if direction == "higher" else 0.3
+    assert gate.compare(base, fast, 0.25)["pass"]
+
+
+def test_markdown_table_marks_regressions(gate):
+    base = _baseline(gate)
+    slow = json.loads(json.dumps(base))
+    fname0, path0, _ = gate.FIELDS[0]
+    segs = path0.split(".")
+    obj = slow[fname0]
+    for seg in segs[:-1]:
+        obj = obj[int(seg)] if isinstance(obj, list) else obj[seg]
+    obj[segs[-1]] *= 0.5
+    table = gate.markdown_table(gate.compare(base, slow, 0.25))
+    assert "FAIL" in table and "**REGRESSION**" in table
+    assert f"{fname0}:{path0}" in table
+    ok_table = gate.markdown_table(gate.compare(base, base, 0.25))
+    assert "PASS" in ok_table and "REGRESSION" not in ok_table
+
+
+def test_self_test_passes(gate):
+    assert gate.self_test(0.25) == 0
+
+
+def test_declared_fields_are_ratios_not_latencies(gate):
+    """The gate's own noise policy: only ratio/rate headlines, never raw
+    latency percentiles or wall times (too noisy on shared runners)."""
+    for _, path, direction in gate.FIELDS:
+        leaf = path.rsplit(".", 1)[-1]
+        assert "latency" not in leaf and "p99" not in leaf \
+            and "p50" not in leaf and not leaf.endswith("_s"), path
+        assert direction in ("higher", "lower")
+
+
+def test_cli_end_to_end(gate, tmp_path):
+    """The exact invocation bench.yml makes: dirs in, exit code + summary
+    + BENCH_trajectory.json out. Regression -> exit 1; first run -> 0."""
+    prev_d, cur_d = tmp_path / "prev", tmp_path / "cur"
+    prev_d.mkdir(), cur_d.mkdir()
+    base = _baseline(gate, 2.0)
+    slow = _baseline(gate, 1.0)              # -50% on everything
+    for name, obj in base.items():
+        (prev_d / name).write_text(json.dumps(obj))
+    for name, obj in slow.items():
+        (cur_d / name).write_text(json.dumps(obj))
+    traj = tmp_path / "BENCH_trajectory.json"
+    summary = tmp_path / "summary.md"
+    p = subprocess.run(
+        [sys.executable, _SCRIPT, "--prev", str(prev_d), "--cur",
+         str(cur_d), "--threshold", "0.25", "--out", str(traj),
+         "--summary", str(summary)],
+        capture_output=True, text=True, timeout=60)
+    assert p.returncode == 1, p.stdout + p.stderr
+    rec = json.loads(traj.read_text())
+    assert not rec["pass"] and rec["regressions"] == len(gate.FIELDS)
+    assert "**REGRESSION**" in summary.read_text()
+    # first run: no --prev contents at all -> passes
+    p = subprocess.run(
+        [sys.executable, _SCRIPT, "--prev", str(tmp_path / "nope"),
+         "--cur", str(cur_d)],
+        capture_output=True, text=True, timeout=60)
+    assert p.returncode == 0, p.stdout + p.stderr
+    # and the self-test flag itself
+    p = subprocess.run([sys.executable, _SCRIPT, "--self-test"],
+                       capture_output=True, text=True, timeout=60)
+    assert p.returncode == 0, p.stdout + p.stderr
+
+
+def test_artifact_loader_finds_nested_dirs(gate, tmp_path):
+    """dawidd6 downloads may unpack into a subdirectory per artifact
+    name; the loader must find BENCH_*.json one level down."""
+    nested = tmp_path / "bench-json"
+    nested.mkdir()
+    fname = gate.FIELDS[0][0]
+    (nested / fname).write_text(json.dumps(_baseline(gate)[fname]))
+    arts = gate.load_artifacts(str(tmp_path))
+    assert fname in arts
+    assert gate.load_artifacts(str(tmp_path / "missing")) == {}

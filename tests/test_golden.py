@@ -166,15 +166,24 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--regen", action="store_true",
-                    help="rewrite tests/golden/wmd_golden.npz from the "
-                         "current toolchain's outputs")
-    if ap.parse_args().regen:
-        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+                    help="rewrite the golden table from the current "
+                         "toolchain's outputs")
+    ap.add_argument("--out", default=GOLDEN,
+                    help="regen target path (default: the checked-in "
+                         "tests/golden/wmd_golden.npz). CI's freshness "
+                         "step regens to a temp path and np.load-compares "
+                         "against the checked-in table -- npz zip entries "
+                         "carry timestamps, so a byte diff of the files "
+                         "is NOT a valid staleness check.")
+    args = ap.parse_args()
+    if args.regen:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)),
+                    exist_ok=True)
         routes = _routes()
-        np.savez(GOLDEN, **routes)
+        np.savez(args.out, **routes)
         for name, arr in sorted(routes.items()):
             print(f"{name:24s} {str(arr.shape):12s} "
                   f"sum={float(np.asarray(arr, np.float64).sum()):.6f}")
-        print(f"wrote {GOLDEN}")
+        print(f"wrote {args.out}")
     else:
         print(__doc__)
