@@ -1,7 +1,7 @@
 """Async serving bench: request coalescer vs per-query sequential dispatch,
 with an arrival-rate x coalescing-window sweep.
 
-    PYTHONPATH=src python benchmarks/bench_serving.py [--tiny] \
+    PYTHONPATH=src python benchmarks/bench_serving.py [--tiny] [--chaos] \
         [--windows-ms 2 5 10] [--rate-factors 0.8 2.0] \
         [--out BENCH_serving.json]
 
@@ -37,6 +37,12 @@ client-side submit -> result):
   identical (the dispatcher-owns-the-device contract). The offline bulk
   run is gated the same way against per-query dispatches of the same
   queries (batch composition must not change a bit).
+* **chaos mode** (``--chaos``) -- the saturating closed loop re-run through
+  a seeded `serving.faultinject.FaultSchedule` (dispatch errors, latency
+  spikes, corrupted outputs) with the resilience layer engaged: the
+  artifact gains an ungated ``chaos`` block with availability
+  (completed/submitted), goodput (exact non-degraded successes per
+  second), degraded fraction, retry and injected-fault counts.
 * **cold vs warm start** -- the first thing the bench does is a registry
   warmup (`serving.warmup`) through a fresh persisted compilation cache:
   the *cold* pass pays every XLA backend compile, then a second identical
@@ -71,7 +77,7 @@ def run(*, vocab: int = 1024, docs: int = 128, v_r: int = 16,
         n_baseline: int = 24, rounds: int = 5,
         windows_ms=(2.0, 5.0, 10.0),
         rate_factors=(0.8, 2.0), cache_capacity: int = 0,
-        zipf_s: float = 1.3, seed: int = 0,
+        zipf_s: float = 1.3, seed: int = 0, chaos: bool = False,
         out: str | None = None) -> dict:
     import tempfile
 
@@ -274,6 +280,51 @@ def run(*, vocab: int = 1024, docs: int = 128, v_r: int = 16,
     print(f"serving/offline,{1e6 / max(off.throughput_qps, 1e-9):.1f},"
           f"qps={off.throughput_qps:.1f}:batches={off.batches}")
 
+    # -- chaos mode (--chaos): the same closed loop through a seeded
+    # fault injector + the resilience layer. Availability = completed /
+    # submitted; goodput = EXACT (non-degraded) successes per second --
+    # degraded bound-only answers keep availability up but don't count as
+    # goodput. Fields are reported, not gated (tests/test_resilience.py
+    # owns the >= 0.99 availability assertion).
+    if chaos:
+        from repro.serving import QueryCoalescer
+        from repro.serving.faultinject import FaultSchedule, FaultyEngine
+        from repro.serving.resilience import ResiliencePolicy
+        sched = FaultSchedule(seed=seed + 7, p_error=0.15, p_latency=0.1,
+                              p_corrupt=0.05, latency_s=0.002)
+        eng = FaultyEngine(svc, sched)
+        policy = ResiliencePolicy(max_retries=3, breaker_failures=4,
+                                  breaker_cooldown_s=0.05,
+                                  backoff_base_s=0.001, backoff_max_s=0.01,
+                                  seed=seed)
+        co = QueryCoalescer(eng, window_ms=2.0, max_batch=max_batch,
+                            resilience=policy)
+        try:
+            res = closed_loop(co.submit, qs, concurrency=max_batch)
+            st = co.stats()
+        finally:
+            co.shutdown(drain=True, timeout=120.0)
+        availability = res.completed / max(res.submitted, 1)
+        goodput = (res.completed - st.degraded) / max(res.duration_s, 1e-9)
+        results["chaos"] = {
+            "schedule": {"seed": seed + 7, "p_error": 0.15,
+                         "p_latency": 0.1, "p_corrupt": 0.05,
+                         "latency_s": 0.002},
+            "injected": dict(eng.injected),
+            "availability": availability,
+            "goodput_qps": goodput,
+            "throughput_qps": res.throughput_qps,
+            "completed": res.completed, "failed": res.failed,
+            "degraded": st.degraded,
+            "degraded_fraction": st.degraded_fraction,
+            "retries": st.retries,
+            "breaker_transitions": st.breaker_transitions}
+        print(f"serving/chaos,{1e6 / max(goodput, 1e-9):.1f},"
+              f"avail={availability:.4f}:goodput={goodput:.1f}qps:"
+              f"degraded_frac={st.degraded_fraction:.3f}:"
+              f"retries={st.retries}:"
+              f"injected={dict(eng.injected)}")
+
     # -- the two MLPerf-style headlines (see module docstring)
     lat_pt = min(results["sweep"],
                  key=lambda p: (p["rate_factor"], p["window_ms"]))
@@ -323,13 +374,17 @@ def main():
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke shape (small corpus, max_batch 8, "
                          "short sweep)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the closed loop through a seeded fault "
+                         "injector + the resilience layer; reports "
+                         "availability / goodput / degraded fraction")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
     if args.tiny:
         run(vocab=512, docs=64, max_batch=8, n_requests=64, n_baseline=16,
             rounds=5, windows_ms=(2.0, 5.0), rate_factors=(0.8, 2.0),
             cache_capacity=args.cache_capacity, seed=args.seed,
-            out=args.out)
+            chaos=args.chaos, out=args.out)
     else:
         run(vocab=args.vocab, docs=args.docs, v_r=args.v_r,
             query_words=args.query_words, mean_words=args.mean_words,
@@ -338,7 +393,7 @@ def main():
             windows_ms=tuple(args.windows_ms),
             rate_factors=tuple(args.rate_factors),
             cache_capacity=args.cache_capacity, zipf_s=args.zipf_s,
-            seed=args.seed, out=args.out)
+            seed=args.seed, chaos=args.chaos, out=args.out)
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@ Layers (bottom-up):
   distributed     -- shard_map multi-chip / multi-pod engine
   kcache          -- cross-query word-id-keyed K/KM row cache
   rwmd            -- doc-side RWMD lower bounds (top-k prune prefilter)
+  guards          -- typed numeric guards (underflow pre-check, non-finite
+                     and silent-zero detection, admission validation)
 """
 from repro.core.cost_matrix import cdist, cdist_direct, cdist_matmul
 from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
@@ -19,6 +21,9 @@ from repro.core.formats import (BucketedEll, EllDocs, bucket_by_length,
 from repro.core.sinkhorn import (SinkhornPrecompute, assemble_precompute,
                                  m_rows, precompute, precompute_rows,
                                  select_query, sinkhorn_wmd_dense)
+from repro.core.guards import (GuardError, InvalidQueryError, NumericalError,
+                               check_distances, check_finite, check_km_rows,
+                               underflow_possible, validate_query)
 from repro.core.kcache import KCache, KCacheStats
 from repro.core.rwmd import (assemble_m_stripes, rwmd_bound_batch,
                              rwmd_lower_bound, rwmd_query_side_bound)
@@ -44,6 +49,9 @@ __all__ = [
     "pad_docs", "rebucket_for_vocab_shards",
     "SinkhornPrecompute", "assemble_precompute", "m_rows", "precompute",
     "precompute_rows", "select_query", "sinkhorn_wmd_dense",
+    "GuardError", "InvalidQueryError", "NumericalError",
+    "check_distances", "check_finite", "check_km_rows",
+    "underflow_possible", "validate_query",
     "KCache", "KCacheStats",
     "assemble_m_stripes", "rwmd_bound_batch", "rwmd_lower_bound",
     "rwmd_query_side_bound",

@@ -1,18 +1,30 @@
 """Elastic mesh derivation: pick a (pod, data, model) factoring for whatever
 device count survives. Configs use named axes only, so any factoring works;
-checkpoint restore re-shards (checkpointer.restore with new shardings)."""
+checkpoint restore re-shards (checkpointer.restore with new shardings).
+
+`mesh_shape` is the pure factoring rule (unit-testable without devices,
+tests/test_elastic.py); `remesh` materializes it over `jax.devices()`.
+"""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
-def remesh(num_devices: int, *, model_parallelism: int = 16,
-           pod_size: int = 256):
-    """Largest usable mesh for ``num_devices``:
+def mesh_shape(num_devices: int, *, model_parallelism: int = 16,
+               pod_size: int = 256) -> tuple[tuple[int, ...],
+                                             tuple[str, ...]]:
+    """The factoring rule of `remesh`, device-free: (shape, axis names).
+
     pods = devices // pod_size (multi-pod if >= 2), model = requested TP
-    (reduced to the largest divisor that fits), data = the rest. Drops
-    remainder devices (they become hot spares)."""
-    model = model_parallelism
+    halved until it divides the device count, data = the rest. Remainder
+    devices are dropped (hot spares). ``num_devices`` must
+    be >= 1; a non-positive ``model_parallelism`` is clamped to 1 (no
+    tensor parallelism) instead of dividing by zero."""
+    if num_devices < 1:
+        raise ValueError(
+            f"cannot mesh {num_devices} devices (need at least 1)")
+    model = max(int(model_parallelism), 1)
     while model > 1 and num_devices % model:
         model //= 2
     usable = num_devices - (num_devices % model)
@@ -21,9 +33,21 @@ def remesh(num_devices: int, *, model_parallelism: int = 16,
     while pods > 1 and (chips % pods or (chips // pods) % model):
         pods -= 1
     data = chips // (pods * model)
-    shape = (pods, data, model) if pods > 1 else (data, model)
-    names = ("pod", "data", "model") if pods > 1 else ("data", "model")
-    devices = jax.devices()[:pods * data * model]
-    import numpy as np
+    if pods > 1:
+        return (pods, data, model), ("pod", "data", "model")
+    return (data, model), ("data", "model")
+
+
+def remesh(num_devices: int, *, model_parallelism: int = 16,
+           pod_size: int = 256):
+    """Largest usable mesh for ``num_devices`` (see `mesh_shape` for the
+    factoring rule) over the process's actual devices."""
+    shape, names = mesh_shape(num_devices,
+                              model_parallelism=model_parallelism,
+                              pod_size=pod_size)
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
     arr = np.array(devices).reshape(shape)
     return jax.sharding.Mesh(arr, names)

@@ -15,10 +15,21 @@ Protocol (DESIGN.md section 7):
      latest checkpoint (checkpointer restores onto the new mesh);
   4. stragglers (> factor x median step time) are respawn candidates after
     ``straggler_strikes`` consecutive slow steps.
+
+`ServingWatchdog` applies the same protocol to the serving loop
+(launch/serve.py): each dispatch *kind* ("plain", "top_k") is a virtual
+host beating once per dispatch, so dispatcher silence surfaces as a dead
+host and per-kind service-time straggler strikes (vs a rolling median of
+that kind's own history) fire an ``on_strike`` callback -- wired to
+`serving.resilience.EngineGuard.trip`, which force-opens the active
+rung's breaker and demotes the engine.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import statistics
+import threading
 import time
 from typing import Callable, Optional
 
@@ -83,3 +94,102 @@ class HeartbeatMonitor:
     def surviving(self) -> int:
         self.dead_hosts()
         return sum(st.alive for st in self.hosts.values())
+
+
+@dataclasses.dataclass
+class _KindTrack:
+    """Per-dispatch-kind watchdog state."""
+    last_seen: float = 0.0
+    dispatches: int = 0
+    failures: int = 0
+    strikes: int = 0          # consecutive straggler dispatches
+    tripped: int = 0          # on_strike firings
+    history: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=64))
+
+
+class ServingWatchdog:
+    """Serving-loop watchdog: dispatcher liveness + straggler strikes.
+
+    Wire ``beat`` as the coalescer's ``heartbeat=`` callback; every
+    dispatch reports (kind, wall seconds, ok). A dispatch slower than
+    ``policy.straggler_factor`` x the rolling median of its OWN kind's
+    recent wall times counts one strike (failed dispatches also strike --
+    a rung burning its retry budget is straggling by definition);
+    ``policy.straggler_strikes`` consecutive strikes fire ``on_strike``
+    (-> `EngineGuard.trip`: force-open the active rung, demote) and reset
+    the streak. The median needs ``min_samples`` clean dispatches first,
+    so warmup compiles never strike.
+
+    ``check()`` is the liveness poll for the serving loop: kinds silent
+    longer than ``policy.timeout_s`` while work is pending (``pending_fn``,
+    e.g. ``lambda: co.stats().queue_depth``) are returned as stalled --
+    silence with an empty queue is just an idle server.
+
+    Thread-safe; ``clock`` injectable for deterministic tests."""
+
+    def __init__(self, policy: FaultPolicy | None = None, *,
+                 on_strike: Optional[Callable[[str], None]] = None,
+                 pending_fn: Optional[Callable[[], int]] = None,
+                 min_samples: int = 5,
+                 clock: Callable[[], float] = time.monotonic):
+        self.policy = policy or FaultPolicy()
+        self.on_strike = on_strike
+        self.pending_fn = pending_fn
+        self.min_samples = max(1, min_samples)
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._kinds: dict[str, _KindTrack] = {}
+        self._last_beat = clock()       # any-kind liveness
+
+    def beat(self, kind: str, wall_s: float, ok: bool) -> None:
+        """One dispatch completed (the coalescer heartbeat callback)."""
+        strike_cb = None
+        with self._lock:
+            now = self.clock()
+            self._last_beat = now
+            tr = self._kinds.setdefault(kind, _KindTrack())
+            tr.last_seen = now
+            tr.dispatches += 1
+            if not ok:
+                tr.failures += 1
+            slow = not ok
+            if ok and len(tr.history) >= self.min_samples:
+                med = statistics.median(tr.history)
+                slow = wall_s > self.policy.straggler_factor * med
+            if ok:
+                tr.history.append(wall_s)
+            if slow:
+                tr.strikes += 1
+                if tr.strikes >= self.policy.straggler_strikes:
+                    tr.strikes = 0
+                    tr.tripped += 1
+                    strike_cb = self.on_strike
+            else:
+                tr.strikes = 0
+        if strike_cb is not None:
+            try:
+                strike_cb(kind)
+            except Exception:           # noqa: BLE001 -- monitoring must
+                pass                    # never kill the dispatcher
+
+    def check(self) -> list[str]:
+        """Kinds whose dispatcher looks stalled: silent > ``timeout_s``
+        with work pending. Poll from the serving loop."""
+        pending = self.pending_fn() if self.pending_fn is not None else 1
+        if not pending:
+            return []
+        now = self.clock()
+        with self._lock:
+            return [kind for kind, tr in self._kinds.items()
+                    if now - tr.last_seen > self.policy.timeout_s]
+
+    def report(self) -> dict[str, dict]:
+        """Per-kind counters for the serving loop's final stats dump."""
+        with self._lock:
+            return {kind: {"dispatches": tr.dispatches,
+                           "failures": tr.failures,
+                           "tripped": tr.tripped,
+                           "median_wall_s": (statistics.median(tr.history)
+                                             if tr.history else 0.0)}
+                    for kind, tr in self._kinds.items()}

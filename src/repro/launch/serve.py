@@ -83,6 +83,17 @@ def main():
                          "(0 = submit back-to-back, saturating)")
     ap.add_argument("--requests", type=int, default=64,
                     help="serving loop: total queries to serve")
+    ap.add_argument("--resilience", action="store_true",
+                    help="serving loop: route dispatches through the "
+                         "resilience layer (circuit-breaker impl ladder, "
+                         "bounded retry, degraded bound-only fallback) and "
+                         "run the serving watchdog (dispatcher liveness + "
+                         "straggler strikes -> breaker trips)")
+    ap.add_argument("--brownout-queue", type=int, default=0,
+                    help="serving loop: queue depth that enters brownout "
+                         "(degraded bound-only responses until the queue "
+                         "clears; 0 = brownout disabled). Implies "
+                         "--resilience")
     ap.add_argument("--warmup", action="store_true",
                     help="sinkhorn-wmd: precompile the full serving "
                          "envelope (pow2 Q buckets x request kinds) via "
@@ -304,10 +315,30 @@ def _serve_wmd_loop(svc, cfg, args):
     stream = zipf_query_stream(vocab_size=cfg.vocab_size,
                                query_words=min(cfg.v_r - 1, 13), seed=0)
     qs = [next(stream) for _ in range(args.requests)]
+    guard = watchdog = None
+    if args.resilience or args.brownout_queue:
+        from repro.distributed.fault_tolerance import (FaultPolicy,
+                                                       ServingWatchdog)
+        from repro.serving import EngineGuard, ResiliencePolicy
+        policy = ResiliencePolicy(
+            brownout_queue_hi=args.brownout_queue or None,
+            brownout_queue_lo=max((args.brownout_queue or 0) // 4, 0))
+        guard = EngineGuard(svc, policy)
+        # dispatch-kind heartbeats: straggler strikes force-open the
+        # active rung's breaker (demote); liveness is polled in `finally`
+        watchdog = ServingWatchdog(
+            FaultPolicy(timeout_s=30.0),
+            on_strike=lambda kind: guard.trip(kind))
     co = svc.async_service(window_ms=args.coalesce_window_ms,
                            max_batch=args.max_batch,
                            max_queue=args.max_queue,
-                           default_deadline_ms=args.deadline_ms or None)
+                           default_deadline_ms=args.deadline_ms or None,
+                           resilience=guard,
+                           heartbeat=watchdog.beat if watchdog else None)
+    if watchdog is not None:
+        # stalled-dispatcher detection only counts silence as a stall
+        # while work is actually pending
+        watchdog.pending_fn = lambda: co.stats().queue_depth
     # registry warmup: one pass compiles every shape this coalescer can
     # dispatch (pow2 buckets x kinds), so no live dispatch pays compile
     # time; per-shape compile seconds land in ServingStats
@@ -365,6 +396,23 @@ def _serve_wmd_loop(svc, cfg, args):
               f"deadline_misses={st.deadline_misses}"
               + (f" hit_rate={st.hit_rate:.2f}"
                  if st.hit_rate is not None else ""))
+        if guard is not None:
+            gs = guard.stats()
+            stalled = watchdog.check()
+            print(f"[serve-wmd] resilience: retries={gs.retries} "
+                  f"demoted={gs.demoted} degraded={st.degraded} "
+                  f"({st.degraded_fraction:.1%} of completed) "
+                  f"quarantined={st.quarantined} "
+                  f"breaker_transitions={gs.breaker_transitions} "
+                  f"open_rungs={gs.breaker_open} "
+                  f"brownout_entries={gs.brownout_entries}"
+                  + (f" STALLED={stalled}" if stalled else ""))
+            for kind, rep in watchdog.report().items():
+                print(f"[serve-wmd] watchdog[{kind}]: "
+                      f"{rep['dispatches']} beats, "
+                      f"{rep['failures']} failures, "
+                      f"{rep['tripped']} strikes tripped, "
+                      f"median {rep['median_wall_s'] * 1e3:.1f} ms")
         # SIGINT lands here too: leave the persisted cache state on record
         _report_cache_flush()
 

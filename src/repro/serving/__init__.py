@@ -1,9 +1,14 @@
 """Serving substrate: sharded prefill/decode, the WMD query service, the
 async admission layer (request coalescer + load generators), AOT program
-warmup, and the offline bulk-scoring driver."""
+warmup, the offline bulk-scoring driver, and the resilience layer
+(circuit breakers, retry, brownout degradation; fault injection lives in
+serving.faultinject and is test-only by contract)."""
 from repro.serving.coalescer import (CoalescerClosedError, QueryCoalescer,
                                      QueueFullError, ServingStats)
 from repro.serving.loadgen import LoadgenResult, closed_loop, open_loop
+from repro.serving.resilience import (BrownoutController, CircuitBreaker,
+                                      DegradedResult, EngineGuard,
+                                      ResiliencePolicy, ResilienceStats)
 from repro.serving.offline import (OfflineResult, load_query_file,
                                    run_offline, save_query_file)
 from repro.serving.serve_step import build_serve_fns
@@ -20,4 +25,6 @@ __all__ = ["build_serve_fns", "WMDService", "QueryCoalescer",
            "enable_compilation_cache", "flush_compilation_cache",
            "measure_compiles",
            "OfflineResult", "run_offline", "load_query_file",
-           "save_query_file"]
+           "save_query_file",
+           "ResiliencePolicy", "EngineGuard", "DegradedResult",
+           "CircuitBreaker", "BrownoutController", "ResilienceStats"]

@@ -96,9 +96,13 @@ import heapq
 import threading
 import time
 from concurrent.futures import Future
-from typing import Sequence
+from typing import Callable, Sequence
 
 import numpy as np
+
+from repro.core import guards as _guards
+from repro.serving.resilience import (DegradedResult, EngineGuard,
+                                      ResiliencePolicy)
 
 
 class QueueFullError(RuntimeError):
@@ -138,6 +142,18 @@ class ServingStats:
     # the per-shape compile seconds -- None until record_warmup() is called
     warmed_shapes: int = 0
     warmup_compile_s: dict[str, float] | None = None
+    # resilience (serving.resilience; all zero/False without a policy)
+    quarantined: int = 0          # rejected at admission (InvalidQueryError)
+    degraded: int = 0             # requests served bound-only (DegradedResult)
+    retries: int = 0              # engine dispatch retries
+    breaker_transitions: int = 0  # circuit-breaker state changes
+    breaker_open: int = 0         # rungs currently not closed
+    brownout_active: bool = False
+
+    @property
+    def degraded_fraction(self) -> float:
+        """Fraction of completed requests served by the degraded tier."""
+        return self.degraded / self.completed if self.completed else 0.0
 
 
 @dataclasses.dataclass
@@ -188,12 +204,35 @@ class QueryCoalescer:
                       without bound; percentiles are over this window, and
                       stats() copies it under the lock -- the default keeps
                       that copy well under the coalescing-window scale).
+      validate:       admission-boundary input validation. Against a real
+                      WMD service (one exposing ``cfg.vocab_size``) every
+                      submit runs `core.guards.validate_query` (shape /
+                      finiteness / non-negativity / non-zero mass) and a
+                      bad query raises `InvalidQueryError` at submit time
+                      -- quarantined (``ServingStats.quarantined``), never
+                      enqueued, so one poisoned row can't NaN a whole
+                      coalesced batch. Duck-typed services without a
+                      vocab size get a finite-only check (their payload
+                      contract is theirs).
+      resilience:     a `serving.resilience.ResiliencePolicy` (or a
+                      pre-built `EngineGuard`, e.g. one shared across
+                      coalescers) that routes every dispatch through the
+                      breaker/retry/brownout machinery; degraded responses
+                      resolve futures with `DegradedResult` wrappers.
+                      None (default) dispatches the engine directly.
+      heartbeat:      callback ``(kind, wall_s, ok)`` invoked after every
+                      dispatch -- the `distributed.fault_tolerance.
+                      ServingWatchdog` wiring point (liveness + straggler
+                      strikes). Exceptions from it are swallowed.
     """
 
     def __init__(self, svc, *, window_ms: float = 5.0, max_batch: int = 16,
                  max_queue: int = 256, backpressure: str = "block",
                  default_deadline_ms: float | None = None,
-                 batch_log_size: int = 4096, latency_window: int = 10_000):
+                 batch_log_size: int = 4096, latency_window: int = 10_000,
+                 validate: bool = True,
+                 resilience: "ResiliencePolicy | EngineGuard | None" = None,
+                 heartbeat: Callable[[str, float, bool], None] | None = None):
         if backpressure not in ("block", "reject"):
             raise ValueError(f"backpressure must be block|reject, "
                              f"got {backpressure!r}")
@@ -206,6 +245,16 @@ class QueryCoalescer:
         self.backpressure = backpressure
         self.default_deadline_s = (None if default_deadline_ms is None
                                    else default_deadline_ms / 1e3)
+        self.validate = validate
+        # full validation needs the engine's vocab size; duck-typed fake
+        # services (no cfg) get the finite-only check
+        self._vocab_size = getattr(getattr(svc, "cfg", None),
+                                   "vocab_size", None)
+        if resilience is None or isinstance(resilience, EngineGuard):
+            self._guard = resilience
+        else:
+            self._guard = EngineGuard(svc, resilience)
+        self._heartbeat = heartbeat
 
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)   # dispatcher waits
@@ -225,6 +274,11 @@ class QueryCoalescer:
         self._failed = 0
         self._cancelled = 0
         self._deadline_misses = 0
+        self._quarantined = 0
+        self._degraded = 0
+        # EWMA of the per-request deadline-miss indicator: one of the two
+        # brownout overload signals (queue depth is the other)
+        self._miss_ewma = 0.0
         # lazy min-heap of (deadline, seq, request): queued deadlines without
         # an O(queue) scan per wakeup; entries whose request already left the
         # queue (popped) are expired at read time
@@ -288,6 +342,19 @@ class QueryCoalescer:
     def _submit(self, r: np.ndarray, k: int | None,
                 deadline_ms: float | None, priority: int,
                 timeout: float | None) -> Future:
+        if self.validate:
+            try:
+                if self._vocab_size is not None:
+                    _guards.validate_query(r, self._vocab_size)
+                elif (isinstance(r, np.ndarray)
+                      and np.issubdtype(r.dtype, np.floating)
+                      and not np.isfinite(r).all()):
+                    raise _guards.InvalidQueryError(
+                        "query has non-finite entries")
+            except _guards.InvalidQueryError:
+                with self._lock:
+                    self._quarantined += 1
+                raise
         with self._lock:
             if self._closed:
                 raise CoalescerClosedError("coalescer is shut down")
@@ -424,6 +491,12 @@ class QueryCoalescer:
 
     # -- observability ----------------------------------------------------
 
+    @property
+    def guard(self):
+        """The `EngineGuard` dispatches route through (None without a
+        resilience policy) -- the watchdog's trip() target."""
+        return self._guard
+
     def stats(self) -> ServingStats:
         """Consistent snapshot of counters + latency percentiles. Only the
         raw state is copied under the lock; the percentile math (O(latency
@@ -438,7 +511,9 @@ class QueryCoalescer:
                 rejected=self._rejected,
                 failed=self._failed,
                 cancelled=self._cancelled,
-                deadline_misses=self._deadline_misses)
+                deadline_misses=self._deadline_misses,
+                quarantined=self._quarantined,
+                degraded=self._degraded)
             counts = dict(self._dispatch_counts)
             hist = dict(sorted(self._batch_hist.items()))
             lat_snap = list(self._latencies)
@@ -448,6 +523,8 @@ class QueryCoalescer:
             warmed = self._warmed_shapes
             warm_s = (dict(self._warmup_compile_s)
                       if self._warmup_compile_s is not None else None)
+        # the guard has its own lock; never nest it inside ours
+        rs = self._guard.stats() if self._guard is not None else None
         lat = np.asarray(lat_snap, np.float64) * 1e3
         n_disp = sum(counts.values())
         total_in_batches = sum(q * c for q, c in hist.items())
@@ -469,7 +546,11 @@ class QueryCoalescer:
             hit_rate=hit_rate,
             service_estimate_ms=est_ms,
             warmed_shapes=warmed,
-            warmup_compile_s=warm_s)
+            warmup_compile_s=warm_s,
+            retries=rs.retries if rs else 0,
+            breaker_transitions=rs.breaker_transitions if rs else 0,
+            breaker_open=rs.breaker_open if rs else 0,
+            brownout_active=rs.brownout_active if rs else False)
 
     # -- dispatcher -------------------------------------------------------
 
@@ -561,9 +642,11 @@ class QueryCoalescer:
                 if not batch:            # every popped request was cancelled
                     self._idle.notify_all()
                     continue
-            self._dispatch(batch, cause)
+                depth = self._depth_locked()   # post-cut backlog: the
+            self._dispatch(batch, cause, depth)  # brownout queue signal
 
-    def _dispatch(self, batch: list[_Request], cause: str) -> None:
+    def _dispatch(self, batch: list[_Request], cause: str,
+                  queue_depth: int = 0) -> None:
         """Run one query_batch on the dispatcher thread and fan results out.
 
         Exactly ``svc.query_batch([r for each request, in batch order])`` --
@@ -585,14 +668,28 @@ class QueryCoalescer:
         t0 = time.monotonic()
         err: BaseException | None = None
         results: list = []
+        kind = batch[0].k
+        kind_str = "plain" if kind is None else "top_k"
+        degraded: DegradedResult | None = None
         try:
-            kind = batch[0].k
-            if kind is None:
-                dists = self.svc.query_batch([rq.r for rq in batch])
-                results = [dists[i] for i in range(len(batch))]
+            if self._guard is not None:
+                # resilient route: breaker ladder + retry + brownout
+                # (serving.resilience). Rung 0 is the exact call below, so
+                # fault-free dispatches stay bitwise identical.
+                res = self._guard.dispatch(
+                    kind_str, [rq.r for rq in batch], k=kind,
+                    queue_depth=queue_depth, miss_ewma=self._miss_ewma)
+                if isinstance(res, DegradedResult):
+                    degraded, res = res, res.value
+            elif kind is None:
+                res = self.svc.query_batch([rq.r for rq in batch])
             else:
-                idx, dist = self.svc.top_k_batch(
+                res = self.svc.top_k_batch(
                     [rq.r for rq in batch], kind, prune=True)
+            if kind is None:
+                results = [res[i] for i in range(len(batch))]
+            else:
+                idx, dist = res
                 results = [(idx[i], dist[i]) for i in range(len(batch))]
         except BaseException as e:            # noqa: BLE001 -- fan out to
             err = e                           # futures, keep serving
@@ -618,14 +715,30 @@ class QueryCoalescer:
             for rq in batch:
                 if err is None:
                     self._completed += 1
+                    if degraded is not None:
+                        self._degraded += 1
                     self._latencies.append(t_done - rq.t_submit)
-                    if rq.deadline is not None and t_done > rq.deadline:
+                    missed = (rq.deadline is not None
+                              and t_done > rq.deadline)
+                    if missed:
                         self._deadline_misses += 1
+                    self._miss_ewma = (0.9 * self._miss_ewma
+                                       + 0.1 * float(missed))
                 else:
                     self._failed += 1
+        if self._heartbeat is not None:
+            try:
+                self._heartbeat(kind_str, t_done - t0, err is None)
+            except Exception:                 # noqa: BLE001 -- monitoring
+                pass                          # must never kill serving
         for i, rq in enumerate(batch):
             if err is None:
-                rq.future.set_result(results[i])
+                if degraded is not None:
+                    rq.future.set_result(DegradedResult(
+                        value=results[i], reason=degraded.reason,
+                        tier=degraded.tier))
+                else:
+                    rq.future.set_result(results[i])
             else:
                 rq.future.set_exception(err)
         with self._lock:

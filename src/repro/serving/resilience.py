@@ -1,0 +1,442 @@
+"""Serving resilience: circuit-breaker impl demotion, bounded retry, and
+brownout degradation in front of the WMD engine.
+
+The coalescer (serving.coalescer) turns client streams into engine
+dispatches; this module decides *which* engine those dispatches hit when
+things go wrong, without ever blocking the serving loop:
+
+  EngineGuard     -- the dispatch wrapper. Every batch walks an ordered
+                     ladder of rungs (impl fallbacks: the service default,
+                     then cheaper contraction paths; pruned top-k falls
+                     back to the exhaustive scan route), each rung behind
+                     its own `CircuitBreaker`. Failures retry with seeded
+                     exponential backoff + jitter (`ResiliencePolicy`),
+                     trip the rung's breaker after a failure streak, and
+                     demote to the next rung; when every exact rung is
+                     down (or the `BrownoutController` says the server is
+                     overloaded) the dispatch is served from the RWMD
+                     bound-only degraded tier (`WMDService.
+                     query_batch_bounds` / `top_k_batch_bounds`) and
+                     wrapped in `DegradedResult` so clients can tell.
+  CircuitBreaker  -- classic closed -> open -> half_open machine: a
+                     failure streak opens the rung, a cooldown later one
+                     probe dispatch is let through (half_open), and
+                     `breaker_probes` consecutive probe successes close it
+                     again. A probe failure re-opens immediately.
+  BrownoutController -- hysteretic overload detector: enters brownout when
+                     queue depth or the deadline-miss EWMA crosses its hi
+                     threshold, exits only when BOTH are back under their
+                     lo thresholds AND the brownout has dwelled
+                     ``brownout_dwell_s`` (no flapping at the boundary).
+
+Design rules, each load-bearing for the chaos suite's contracts
+(tests/test_resilience.py):
+
+* Rung 0 dispatches with ``impl=None`` -- byte-for-byte the call the
+  coalescer makes without a guard -- so fault-free dispatches stay
+  *bitwise identical* to the unguarded baseline.
+* `DegradedResult` is a wrapper, never a mutation: normal responses remain
+  raw arrays, so the success path's bitwise contract is untouched and
+  ``isinstance(x, DegradedResult)`` is the complete client-side detection
+  rule.
+* `InvalidQueryError` propagates un-retried (a malformed input is the
+  caller's bug, deterministic forever); everything else -- injected
+  dispatch exceptions, jax runtime errors, `NumericalError` from the
+  guards layer (which is also how *injected non-finite outputs* surface:
+  the guard re-checks every result) -- is retryable up to
+  ``max_retries`` per rung, because the guard cannot distinguish a
+  transient corruption from a persistent one and the breaker bounds the
+  damage either way.
+* All waiting is bounded (retry backoff caps at ``backoff_max_s``); the
+  guard never blocks on a lock while calling the engine, so a slow solve
+  cannot deadlock stats readers.
+
+`distributed.fault_tolerance.ServingWatchdog` plugs in via `trip()`:
+straggler strikes force-open the active rung's breaker from outside.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core import guards as _guards
+
+# the full contraction-path ladder, fastest-and-twitchiest first; a
+# service's ladder starts at its own impl and demotes rightward
+_IMPL_ORDER = ("kernel", "fused", "unfused")
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencePolicy:
+    """Knobs of the resilience layer (all times in seconds).
+
+    ``impl_ladder``: explicit demotion ladder; () derives it from the
+    service impl (e.g. "kernel" -> (None, "fused", "unfused") -- None is
+    "the service default", kept first so fault-free dispatches are the
+    exact unguarded call). ``brownout_queue_hi`` / ``brownout_miss_hi``
+    of None disable that brownout signal; both None disables brownout
+    entirely."""
+    impl_ladder: tuple = ()
+    breaker_failures: int = 3          # failure streak that opens a rung
+    breaker_cooldown_s: float = 5.0    # open -> half_open delay
+    breaker_probes: int = 1            # half_open successes to close
+    max_retries: int = 2               # extra attempts per rung per dispatch
+    backoff_base_s: float = 0.02
+    backoff_mult: float = 2.0
+    backoff_max_s: float = 0.5
+    backoff_jitter: float = 0.5        # uniform [0, j] fraction added
+    seed: int = 0                      # jitter rng seed
+    brownout_queue_hi: int | None = None
+    brownout_queue_lo: int = 0
+    brownout_miss_hi: float | None = None
+    brownout_miss_lo: float = 0.0
+    brownout_dwell_s: float = 1.0      # min time browned out before exit
+    degrade_on_failure: bool = True    # bound-only answers when rungs die
+
+
+@dataclasses.dataclass
+class DegradedResult:
+    """A degraded (bound-only) response. ``value`` carries whatever the
+    normal response would have been shaped like -- a (N,) bound row for a
+    plain query, an ``(idx, dist)`` pair for top-k -- computed by the RWMD
+    lower-bound tier instead of the exact Sinkhorn engine. ``reason`` says
+    why ("brownout" or the engine failure), ``tier`` what produced it.
+    Clients detect degradation with ``isinstance(x, DegradedResult)``;
+    non-degraded responses are never wrapped."""
+    value: object
+    reason: str
+    tier: str = "rwmd_bound"
+
+
+class CircuitBreaker:
+    """closed -> open -> half_open -> closed, with a transition log.
+
+    Not thread-safe by itself; `EngineGuard` serializes access under its
+    own lock. ``clock`` is injectable for deterministic tests."""
+
+    def __init__(self, *, failures: int = 3, cooldown_s: float = 5.0,
+                 probes: int = 1, clock: Callable[[], float] = time.monotonic):
+        self.failures = max(1, failures)
+        self.cooldown_s = cooldown_s
+        self.probes = max(1, probes)
+        self._clock = clock
+        self.state = "closed"
+        self.transitions: list[tuple[str, str]] = []
+        self._streak = 0
+        self._probe_ok = 0
+        self._opened_at = 0.0
+
+    def _to(self, state: str) -> None:
+        if state != self.state:
+            self.transitions.append((self.state, state))
+            self.state = state
+
+    def allow(self) -> bool:
+        """May a dispatch use this rung right now? An open breaker past
+        its cooldown transitions to half_open and admits one probe."""
+        if self.state == "open":
+            if self._clock() - self._opened_at >= self.cooldown_s:
+                self._probe_ok = 0
+                self._to("half_open")
+                return True
+            return False
+        return True
+
+    def record_success(self) -> None:
+        self._streak = 0
+        if self.state == "half_open":
+            self._probe_ok += 1
+            if self._probe_ok >= self.probes:
+                self._to("closed")
+
+    def record_failure(self) -> None:
+        if self.state == "half_open":       # failed probe: back to open
+            self._opened_at = self._clock()
+            self._to("open")
+            return
+        self._streak += 1
+        if self._streak >= self.failures and self.state == "closed":
+            self._opened_at = self._clock()
+            self._to("open")
+
+    def force_open(self) -> None:
+        """External trip (watchdog straggler strikes)."""
+        self._opened_at = self._clock()
+        self._streak = 0
+        self._to("open")
+
+
+class BrownoutController:
+    """Hysteretic overload detector driving the degraded tier.
+
+    Enter when EITHER signal crosses its hi threshold; exit only when
+    BOTH are at/below their lo thresholds and at least ``dwell_s`` has
+    passed since entering (flap suppression). Signals with a None hi
+    threshold never trigger entry and never hold exit."""
+
+    def __init__(self, *, queue_hi: int | None = None, queue_lo: int = 0,
+                 miss_hi: float | None = None, miss_lo: float = 0.0,
+                 dwell_s: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.queue_hi, self.queue_lo = queue_hi, queue_lo
+        self.miss_hi, self.miss_lo = miss_hi, miss_lo
+        self.dwell_s = dwell_s
+        self._clock = clock
+        self.active = False
+        self.entries = 0
+        self._entered_at = 0.0
+
+    def update(self, queue_depth: int, miss_ewma: float) -> bool:
+        hot = ((self.queue_hi is not None and queue_depth >= self.queue_hi)
+               or (self.miss_hi is not None and miss_ewma >= self.miss_hi))
+        if not self.active:
+            if hot:
+                self.active = True
+                self.entries += 1
+                self._entered_at = self._clock()
+            return self.active
+        calm = ((self.queue_hi is None or queue_depth <= self.queue_lo)
+                and (self.miss_hi is None or miss_ewma <= self.miss_lo))
+        if calm and self._clock() - self._entered_at >= self.dwell_s:
+            self.active = False
+        return self.active
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceStats:
+    """Snapshot of the guard's counters (cumulative)."""
+    dispatches: int
+    retries: int
+    failures: int                 # failed attempts (incl. retried ones)
+    demoted: int                  # dispatches served below rung 0
+    degraded: int                 # dispatches served by the bound tier
+    degraded_requests: int        # requests inside those dispatches
+    breaker_transitions: int
+    breaker_open: int             # rungs currently open (incl. half_open)
+    brownout_active: bool
+    brownout_entries: int
+    breaker_states: dict[str, str]   # "kind/rung" -> state
+
+
+def _default_ladder(svc_impl: str) -> tuple:
+    """(None, <impls strictly below svc_impl in the order>): None = the
+    service default (the exact unguarded dispatch), demotions follow."""
+    try:
+        start = _IMPL_ORDER.index(svc_impl)
+    except ValueError:
+        return (None,)
+    return (None,) + _IMPL_ORDER[start + 1:]
+
+
+class EngineGuard:
+    """Resilient dispatch wrapper around a `WMDService`-shaped engine.
+
+    The coalescer (or any caller) routes batches through `dispatch`; the
+    guard walks the rung ladder, retries, trips breakers, and falls back
+    to the degraded bound tier. ``clock`` / ``sleep`` are injectable so
+    the chaos suite runs the whole machine on a fake clock."""
+
+    def __init__(self, svc, policy: ResiliencePolicy | None = None, *,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.svc = svc
+        self.policy = policy or ResiliencePolicy()
+        self._clock = clock
+        self._sleep = sleep
+        self._rng = np.random.default_rng(self.policy.seed)
+        self._lock = threading.Lock()
+        ladder = tuple(self.policy.impl_ladder) or _default_ladder(
+            getattr(svc, "impl", "fused"))
+        # rung tables: ("impl", x) dispatches query_batch(impl=x);
+        # ("pruned", x) dispatches the two-tier top-k with impl x;
+        # ("scan", None) the exhaustive one-program top-k route -- a
+        # genuinely different code path for when the prune machinery
+        # itself is what's failing
+        self._rungs: dict[str, list[tuple[str, object]]] = {
+            "plain": [("impl", impl) for impl in ladder],
+            "top_k": [("pruned", impl) for impl in ladder]
+                     + [("scan", None)],
+        }
+        mk = lambda: CircuitBreaker(                      # noqa: E731
+            failures=self.policy.breaker_failures,
+            cooldown_s=self.policy.breaker_cooldown_s,
+            probes=self.policy.breaker_probes, clock=clock)
+        self._breakers = {(kind, i): mk()
+                          for kind, rungs in self._rungs.items()
+                          for i in range(len(rungs))}
+        self.brownout = BrownoutController(
+            queue_hi=self.policy.brownout_queue_hi,
+            queue_lo=self.policy.brownout_queue_lo,
+            miss_hi=self.policy.brownout_miss_hi,
+            miss_lo=self.policy.brownout_miss_lo,
+            dwell_s=self.policy.brownout_dwell_s, clock=clock)
+        # counters (under _lock)
+        self._dispatches = 0
+        self._retries = 0
+        self._failures = 0
+        self._demoted = 0
+        self._degraded = 0
+        self._degraded_requests = 0
+        # (kind, rung_index, degraded) of recent dispatches, for the chaos
+        # suite's replay oracle (which rung actually served each batch);
+        # bounded like the coalescer's batch_log so a long-lived server
+        # can't grow it without bound
+        self.dispatch_log: collections.deque[tuple[str, int, bool]] = \
+            collections.deque(maxlen=4096)
+
+    # -- dispatch ---------------------------------------------------------
+
+    def _call(self, kind: str, rung: tuple[str, object],
+              payloads: Sequence[np.ndarray], k: int | None):
+        mode, impl = rung
+        if mode == "impl":
+            if impl is None:
+                return self.svc.query_batch(payloads)
+            return self.svc.query_batch(payloads, impl=impl)
+        if mode == "pruned":
+            kw = {} if impl is None else {"impl": impl}
+            return self.svc.top_k_batch(payloads, k, prune=True, **kw)
+        return self.svc.top_k_batch(payloads, k, prune=False)
+
+    def _post_check(self, kind: str, res) -> None:
+        """Re-verify the result at the guard boundary: the service's own
+        guards run *inside* the engine, so corruption injected at the
+        engine boundary (faultinject) -- or a service with guards off --
+        is caught here and treated as a dispatch failure."""
+        if kind == "plain":
+            _guards.check_finite(res, "dispatch result")
+        else:
+            _guards.check_finite(res[1], "top_k dispatch distances")
+
+    def _backoff(self, attempt: int) -> float:
+        p = self.policy
+        base = min(p.backoff_base_s * (p.backoff_mult ** attempt),
+                   p.backoff_max_s)
+        with self._lock:
+            jitter = float(self._rng.random()) * p.backoff_jitter
+        return base * (1.0 + jitter)
+
+    def _degrade(self, kind: str, payloads, k: int | None,
+                 reason: str) -> DegradedResult:
+        if kind == "plain":
+            val = self.svc.query_batch_bounds(payloads)
+        else:
+            val = self.svc.top_k_batch_bounds(payloads, k)
+        with self._lock:
+            self._degraded += 1
+            self._degraded_requests += len(payloads)
+        return DegradedResult(value=val, reason=reason)
+
+    def dispatch(self, kind: str, payloads: Sequence[np.ndarray],
+                 k: int | None = None, *, queue_depth: int = 0,
+                 miss_ewma: float = 0.0):
+        """Serve one batch resiliently. Returns the engine result (raw --
+        bitwise identical to an unguarded dispatch when rung 0 succeeds
+        first try) or a `DegradedResult`; raises only when every rung AND
+        the degraded tier failed (or degradation is disabled)."""
+        if kind not in self._rungs:
+            raise ValueError(f"unknown dispatch kind {kind!r}")
+        with self._lock:
+            self._dispatches += 1
+            browned = self.brownout.update(queue_depth, miss_ewma)
+        if browned:
+            try:
+                res = self._degrade(kind, payloads, k, "brownout")
+                with self._lock:
+                    self.dispatch_log.append((kind, -1, True))
+                return res
+            except _guards.InvalidQueryError:
+                raise
+            except Exception:
+                pass          # bound tier down too: fall through to exact
+        last_err: BaseException | None = None
+        for i, rung in enumerate(self._rungs[kind]):
+            br = self._breakers[(kind, i)]
+            attempt = 0
+            while True:
+                with self._lock:
+                    if not br.allow():
+                        break
+                try:
+                    res = self._call(kind, rung, payloads, k)
+                    self._post_check(kind, res)
+                except _guards.InvalidQueryError:
+                    raise     # caller bug: deterministic, never retried
+                except Exception as e:    # noqa: BLE001 -- rung fault
+                    last_err = e
+                    with self._lock:
+                        self._failures += 1
+                        br.record_failure()
+                        retry = (attempt < self.policy.max_retries
+                                 and br.allow())
+                        if retry:
+                            self._retries += 1
+                    if not retry:
+                        break             # rung exhausted: demote
+                    attempt += 1
+                    self._sleep(self._backoff(attempt))
+                    continue
+                with self._lock:
+                    br.record_success()
+                    if i > 0:
+                        self._demoted += 1
+                    self.dispatch_log.append((kind, i, False))
+                return res
+        if self.policy.degrade_on_failure:
+            try:
+                res = self._degrade(
+                    kind, payloads, k,
+                    f"engine_failure: {type(last_err).__name__}: {last_err}"
+                    if last_err is not None else "all rungs open")
+                with self._lock:
+                    self.dispatch_log.append((kind, -1, True))
+                return res
+            except _guards.InvalidQueryError:
+                raise
+            except Exception as e:        # noqa: BLE001
+                last_err = last_err or e
+        if last_err is None:
+            last_err = RuntimeError("every rung breaker is open")
+        raise last_err
+
+    # -- external hooks ---------------------------------------------------
+
+    def observe(self, queue_depth: int, miss_ewma: float) -> bool:
+        """Feed overload signals outside a dispatch (e.g. a monitoring
+        loop); returns whether brownout is active."""
+        with self._lock:
+            return self.brownout.update(queue_depth, miss_ewma)
+
+    def trip(self, kind: str = "plain", reason: str = "") -> None:
+        """Force-open the first non-open rung of ``kind`` (watchdog hook:
+        straggler strikes demote the engine from outside)."""
+        with self._lock:
+            for i in range(len(self._rungs[kind])):
+                br = self._breakers[(kind, i)]
+                if br.state != "open":
+                    br.force_open()
+                    return
+
+    def stats(self) -> ResilienceStats:
+        with self._lock:
+            states = {f"{kind}/{i}": br.state
+                      for (kind, i), br in sorted(self._breakers.items())}
+            return ResilienceStats(
+                dispatches=self._dispatches,
+                retries=self._retries,
+                failures=self._failures,
+                demoted=self._demoted,
+                degraded=self._degraded,
+                degraded_requests=self._degraded_requests,
+                breaker_transitions=sum(len(br.transitions)
+                                        for br in self._breakers.values()),
+                breaker_open=sum(1 for br in self._breakers.values()
+                                 if br.state != "closed"),
+                brownout_active=self.brownout.active,
+                brownout_entries=self.brownout.entries,
+                breaker_states=states)

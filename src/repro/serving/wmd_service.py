@@ -132,6 +132,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import sinkhorn_wmd as wmd_cfg
 from repro.core import formats, select_query
+from repro.core import guards as _guards
 from repro.core import rwmd as rwmd_core
 from repro.core.kcache import KCache
 from repro.core.distributed import (build_wmd_batch_fn,
@@ -178,6 +179,7 @@ class WMDService:
     prune_margin: float = 1e-3
     bound_impl: str = "fused"
     bound_docs_chunk: int | None = 256
+    guards: bool = True
 
     def __post_init__(self):
         model_size = self.mesh.shape["model"]
@@ -209,6 +211,14 @@ class WMDService:
                                // self._doc_shards) * self._doc_shards
         self._rerank_spec = NamedSharding(
             self.mesh, P("model", tuple(self._doc_axes), None))
+        # numeric-guard state: the a-priori underflow gate needs the
+        # largest embedding norm (cost bound 2*max||v||); docs with zero
+        # total mass legitimately solve to distance 0 and are exempt from
+        # the armed-gate zero-cell check
+        self._max_vec_norm = float(np.sqrt(
+            (self.vecs.astype(np.float64) ** 2).sum(axis=-1).max())) \
+            if self.vecs.size else 0.0
+        self._empty_doc_mask = np.asarray(self.ell.vals.sum(axis=-1) == 0)
         self.last_batch_stats: dict = {}
         self.last_prune_stats: dict = {}
         self._engine_lock = threading.RLock()   # see _serialized
@@ -233,6 +243,44 @@ class WMDService:
         an empty queue and no in-flight batch (coalescers stay open)."""
         for co in list(self._coalescers):
             co.drain(timeout=timeout)
+
+    # -- numeric guards ---------------------------------------------------
+
+    def _underflow_risk(self) -> bool:
+        """Is the lambda-underflow post-check armed for the current lambda?
+        Recomputed per call (cfg.lamb is mutable, see ensure_lamb); False
+        at every shipped config so the zero-cell check costs nothing."""
+        return self.guards and _guards.underflow_possible(
+            self.cfg.lamb, self._max_vec_norm)
+
+    def _validate_queries(self, rs) -> None:
+        if not self.guards:
+            return
+        v = self.vecs.shape[0]
+        for i, r in enumerate(rs):
+            try:
+                _guards.validate_query(r, v)
+            except _guards.InvalidQueryError as e:
+                e.context["query_index"] = i
+                raise
+
+    def _check_km(self, km_s, mask_b) -> None:
+        """Lambda-underflow pre-check on assembled K*M stripes; the big
+        reduction runs on device so only (Q, v_r) scalars come to host."""
+        if not self.guards:
+            return
+        rowmax = np.asarray(jnp.max(jnp.abs(km_s), axis=(0, -1)))
+        _guards.check_km_rows(rowmax, mask_b, lamb=self.cfg.lamb)
+
+    def _check_result(self, d, *, what: str,
+                      empty_doc_mask: np.ndarray | None = None) -> None:
+        if not self.guards:
+            return
+        if empty_doc_mask is None:
+            empty_doc_mask = self._empty_doc_mask
+        _guards.check_distances(d, lamb=self.cfg.lamb,
+                                risk=self._underflow_risk(),
+                                empty_doc_mask=empty_doc_mask, what=what)
 
     @property
     def cache_stats(self):
@@ -290,12 +338,15 @@ class WMDService:
     @_serialized
     def query(self, r: np.ndarray) -> np.ndarray:
         """r: (V,) sparse query histogram -> (N,) distances."""
+        self._validate_queries([r])
         sel_idx, r_sel = select_query(r)
         sel_p, r_p, mask = pad_query(sel_idx, r_sel, self.cfg.v_r)
         wmd = self._single_fn()(jnp.asarray(self.vecs[sel_p]),
                                 jnp.asarray(r_p), jnp.asarray(mask),
                                 self._vecs_d, self._cols_d, self._vals_d)
-        return np.asarray(wmd)
+        wmd = np.asarray(wmd)
+        self._check_result(wmd, what="query distances")
+        return wmd
 
     @_serialized
     def query_batch(self, rs: Sequence[np.ndarray],
@@ -319,9 +370,15 @@ class WMDService:
         """
         if len(rs) == 0:
             return np.zeros((0, self.ell.num_docs), np.float32)
+        self._validate_queries(rs)
+        # under an armed underflow gate every dispatch routes through the
+        # stripes engine so the K*M pre-check (`core.guards.check_km_rows`)
+        # sees the assembled rows; off at every shipped lambda, so the
+        # fast-path routing below is untouched in production
+        risk = self._underflow_risk()
         if (len(rs) == 1 and impl is None and docs_chunk is _UNSET
                 and self.impl == "fused" and self.tol == 0.0
-                and self.cache_capacity == 0):
+                and self.cache_capacity == 0 and not risk):
             # admission policy: a singleton is *slower* batched than
             # sequential (0.96x in BENCH_query_batch.json -- the (Q, v_r, N)
             # precompute/padding overhead has nothing to amortize), so route
@@ -338,7 +395,7 @@ class WMDService:
         sel_b, r_b, mask_b = self._padded_query_batch(rs)
         q = len(rs)
         dc = self.docs_chunk if docs_chunk is _UNSET else (docs_chunk or None)
-        if use_cache is None and self.cache_capacity == 0:
+        if use_cache is None and self.cache_capacity == 0 and not risk:
             # cache disabled and no explicit routing request: the legacy
             # single-program engine (precompute fused into the solve) is the
             # faster plan -- the split stripes path pays an extra dispatch
@@ -350,7 +407,9 @@ class WMDService:
             wmd = fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
                      jnp.asarray(mask_b), self._vecs_d, self._cols_d,
                      self._vals_d)
-            return np.asarray(wmd)[:q]
+            wmd = np.asarray(wmd)[:q]
+            self._check_result(wmd, what="query_batch distances")
+            return wmd
         fn = self._stripe_fn(impl or self.impl, dc)
         self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
         use = use_cache is not False              # False = transient baseline
@@ -359,12 +418,14 @@ class WMDService:
                                                          use_cache=use)
         jax.block_until_ready((k_s, km_s))
         t_pre = time.perf_counter() - t0
+        self._check_km(km_s, mask_b)
         t0 = time.perf_counter()
         wmd = np.asarray(fn(k_s, km_s, jnp.asarray(r_b),
                             self._cols_d, self._vals_d))[:q]
         t_solve = time.perf_counter() - t0
         self.last_batch_stats = {"precompute_s": t_pre, "solve_s": t_solve,
                                  **info}
+        self._check_result(wmd, what="query_batch distances")
         return wmd
 
     def query_batch_sequential(self, rs: Sequence[np.ndarray]) -> np.ndarray:
@@ -536,6 +597,7 @@ class WMDService:
         if len(rs) == 0:
             return (np.zeros((0, k_eff), np.int64),
                     np.zeros((0, k_eff), np.float32))
+        self._validate_queries(rs)
         chunk = self._rerank_chunk if prune_chunk is None else \
             -(-max(prune_chunk, 1) // self._doc_shards) * self._doc_shards
         margin = self.prune_margin if prune_margin is None else prune_margin
@@ -556,6 +618,7 @@ class WMDService:
         for i in range(q):
             k_s, km_s, info = self._kcache.stripes_for_batch(
                 sel_b[i:i + 1], mask_b[i:i + 1], use_cache=use)
+            self._check_km(km_s, mask_b[i:i + 1])
             hits += info["hits"]
             misses += info["misses"]
             r_q = jnp.asarray(r_b[i:i + 1])
@@ -596,6 +659,9 @@ class WMDService:
             "rerank_programs": programs,
             "bound_s": t_bound, "rerank_s": t_rerank,
         }
+        # underflowed zeros sort first, so the selected top-k surfaces them
+        self._check_result(d_out, what="top_k distances",
+                           empty_doc_mask=self._empty_doc_mask[idx_out])
         # aggregate cache telemetry so coalesced top-k dispatches feed the
         # same hit-rate passthrough as plain query dispatches
         total = hits + misses
@@ -642,6 +708,7 @@ class WMDService:
         if len(rs) == 0:
             return (np.zeros((0, k_eff), np.int64),
                     np.zeros((0, k_eff), np.float32))
+        self._validate_queries(rs)
         chunk = self._rerank_chunk if prune_chunk is None else \
             -(-max(prune_chunk, 1) // self._doc_shards) * self._doc_shards
         margin = self.prune_margin if prune_margin is None else prune_margin
@@ -657,6 +724,7 @@ class WMDService:
         # online path) -- rows are bit-reproducible either way
         k_s, km_s, info = self._kcache.stripes_for_batch(sel_b, mask_b,
                                                          use_cache=use)
+        self._check_km(km_s, mask_b)
         r_all = jnp.asarray(r_b)                  # (Q_pow2, v_r)
         min_lb = lb.min(axis=0)                   # union visit order key
         solved_d = np.full((q, n), np.inf, np.float32)
@@ -707,7 +775,49 @@ class WMDService:
             "hit_rate": info.get("hit_rate", 0.0),
             "precompute_s": t_bound, "solve_s": t_rerank,
         }
+        self._check_result(d_out, what="top_k distances",
+                           empty_doc_mask=self._empty_doc_mask[idx_out])
         return idx_out, d_out
+
+    # -- degraded tier: bound-only answers --------------------------------
+
+    @_serialized
+    def query_batch_bounds(self, rs: Sequence[np.ndarray]) -> np.ndarray:
+        """Degraded tier: (Q, N) doc-side RWMD *lower bounds* instead of
+        exact Sinkhorn distances -- the brownout answer.
+
+        One O(nnz * v_r) prefilter program, no Sinkhorn iterations at all:
+        orders of magnitude cheaper than `query_batch` and a sound lower
+        bound at any budget (see core.rwmd). `serving.resilience` serves
+        these (wrapped in `DegradedResult`, never raw) when the engine is
+        browned out or every exact rung has failed."""
+        if len(rs) == 0:
+            return np.zeros((0, self.ell.num_docs), np.float32)
+        self._validate_queries(rs)
+        q = len(rs)
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        t0 = time.perf_counter()
+        lb = self._bounds_for_batch(sel_b, mask_b)[:q]
+        t_bound = time.perf_counter() - t0
+        self.last_batch_stats = {"precompute_s": t_bound, "solve_s": 0.0,
+                                 "degraded": True}
+        if self.guards:
+            _guards.check_finite(lb, "rwmd bounds", lamb=self.cfg.lamb)
+        return lb
+
+    @_serialized
+    def top_k_batch_bounds(self, rs: Sequence[np.ndarray], k: int = 10
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Degraded top-k: nearest-k by RWMD bound only (no rerank). Same
+        tie-deterministic selection as the exact paths, so a given bound
+        matrix always yields the same id set."""
+        lb = self.query_batch_bounds(rs)
+        k_eff = min(k, self.ell.num_docs)
+        if len(rs) == 0:
+            return (np.zeros((0, k_eff), np.int64),
+                    np.zeros((0, k_eff), np.float32))
+        idx = self._top_k(lb, k_eff)
+        return idx, np.take_along_axis(lb, idx, axis=-1)
 
     # -- ahead-of-time warmup ---------------------------------------------
 

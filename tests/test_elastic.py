@@ -1,0 +1,54 @@
+"""Elastic mesh factoring: `mesh_shape` is pure (no devices needed), so
+every shrink scenario from DESIGN.md section 7 is pinned here, including
+the degenerate counts that used to divide by zero."""
+import numpy as np
+import pytest
+
+from repro.distributed.elastic import mesh_shape, remesh
+
+
+@pytest.mark.parametrize("n,mp,expect", [
+    (16, 16, ((1, 16), ("data", "model"))),
+    (32, 16, ((2, 16), ("data", "model"))),
+    # 16 does not divide 12: model halves 16 -> 8 -> 4
+    (12, 16, ((3, 4), ("data", "model"))),
+    # odd survivor count: model collapses all the way to 1
+    (7, 16, ((7, 1), ("data", "model"))),
+    (1, 16, ((1, 1), ("data", "model"))),
+    (1, 1, ((1, 1), ("data", "model"))),
+    # no tensor parallelism requested
+    (8, 1, ((8, 1), ("data", "model"))),
+])
+def test_mesh_shape_factorings(n, mp, expect):
+    assert mesh_shape(n, model_parallelism=mp) == expect
+
+
+def test_mesh_shape_multi_pod():
+    shape, names = mesh_shape(1024, model_parallelism=16, pod_size=256)
+    assert names == ("pod", "data", "model")
+    assert shape == (4, 16, 16)
+    assert int(np.prod(shape)) == 1024
+
+
+def test_mesh_shape_pod_shrink_keeps_divisibility():
+    # 768 = 3 pods of 256; every pod slice must still factor data x model
+    shape, names = mesh_shape(768, model_parallelism=16, pod_size=256)
+    pods, data, model = shape
+    assert names == ("pod", "data", "model")
+    assert pods * data * model == 768 and model == 16
+
+
+def test_mesh_shape_degenerate_inputs():
+    with pytest.raises(ValueError):
+        mesh_shape(0)
+    with pytest.raises(ValueError):
+        mesh_shape(-4)
+    # non-positive model parallelism clamps to 1 instead of ZeroDivisionError
+    assert mesh_shape(6, model_parallelism=0) == ((6, 1), ("data", "model"))
+    assert mesh_shape(6, model_parallelism=-2) == ((6, 1), ("data", "model"))
+
+
+def test_remesh_materializes_on_cpu():
+    mesh = remesh(1, model_parallelism=16)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (1, 1)
