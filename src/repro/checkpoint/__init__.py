@@ -1,5 +1,7 @@
 """Sharded async elastic checkpointing."""
-from repro.checkpoint.checkpointer import (AsyncCheckpointer, latest_step,
-                                           restore, save)
+from repro.checkpoint.checkpointer import (AsyncCheckpointer,
+                                           CheckpointCorruptionError,
+                                           latest_step, restore, save)
 
-__all__ = ["AsyncCheckpointer", "latest_step", "restore", "save"]
+__all__ = ["AsyncCheckpointer", "CheckpointCorruptionError", "latest_step",
+           "restore", "save"]

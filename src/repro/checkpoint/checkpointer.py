@@ -41,6 +41,11 @@ except ImportError:
 _COMPRESS_LEVEL = 3
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint on disk fails its integrity check (shard checksum
+    mismatch, missing shard, or unreadable metadata)."""
+
+
 def _path_str(path) -> str:
     return jax.tree_util.keystr(path)
 
@@ -67,6 +72,7 @@ class AsyncCheckpointer:
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def save(self, step: int, state: Any, *, mesh_signature: str = "") -> None:
         self.wait()
@@ -75,16 +81,25 @@ class AsyncCheckpointer:
         sig = _tree_signature(state)
 
         def work():
-            _write(self.ckpt_dir, step, host, sig, mesh_signature, 0)
-            _gc(self.ckpt_dir, self.keep)
+            try:
+                _write(self.ckpt_dir, step, host, sig, mesh_signature, 0)
+                _gc(self.ckpt_dir, self.keep)
+            except BaseException as e:  # surfaced on the next wait()/save()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight write. A failure on the background thread is
+        re-raised here (once) rather than dying silently -- otherwise the
+        train loop keeps running while every checkpoint is lost."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
 
 def _write(ckpt_dir, step, host: dict, tree_sig, mesh_sig, proc) -> str:
@@ -107,7 +122,10 @@ def _write(ckpt_dir, step, host: dict, tree_sig, mesh_sig, proc) -> str:
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump({"step": step, "tree_signature": tree_sig,
                    "mesh_signature": mesh_sig,
-                   "num_arrays": len(host)}, f)
+                   "num_arrays": len(host),
+                   "shards": {shard_name: {
+                       "sha256": hashlib.sha256(blob).hexdigest(),
+                       "bytes": len(blob)}}}, f)
     if os.path.exists(final):
         import shutil
         shutil.rmtree(final)
@@ -123,12 +141,54 @@ def _gc(ckpt_dir: str, keep: int) -> None:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
+def _step_intact(path: str) -> bool:
+    """True when a step dir's metadata is readable and every shard listed
+    in it exists with a matching sha256.  Legacy checkpoints (no "shards"
+    key in meta.json) are trusted as-is."""
+    try:
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, ValueError):
+        return False
+    for name, rec in meta.get("shards", {}).items():
+        shard = os.path.join(path, name)
+        try:
+            with open(shard, "rb") as f:
+                blob = f.read()
+        except OSError:
+            return False
+        if len(blob) != rec["bytes"]:
+            return False
+        if hashlib.sha256(blob).hexdigest() != rec["sha256"]:
+            return False
+    return True
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step whose checkpoint is intact.  Corrupt or incomplete
+    steps (truncated shard, bit-flip, missing meta) are skipped so a
+    restart falls back to the last good one instead of crashing."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+    steps = sorted((int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                    if d.startswith("step_") and not d.endswith(".tmp")),
+                   reverse=True)
+    for step in steps:
+        if _step_intact(os.path.join(ckpt_dir, f"step_{step:08d}")):
+            return step
+    return None
+
+
+def _verify_shard(meta: dict, name: str, blob: bytes) -> None:
+    rec = meta.get("shards", {}).get(name)
+    if rec is None:  # legacy checkpoint written before checksums existed
+        return
+    if len(blob) != rec["bytes"] or \
+            hashlib.sha256(blob).hexdigest() != rec["sha256"]:
+        raise CheckpointCorruptionError(
+            f"shard {name}: on-disk bytes do not match the checksum in "
+            f"meta.json (expected {rec['bytes']}B sha256={rec['sha256']}, "
+            f"got {len(blob)}B) -- the checkpoint is corrupt")
 
 
 def restore(ckpt_dir: str, step: int, like: Any, *,
@@ -149,10 +209,13 @@ def restore(ckpt_dir: str, step: int, like: Any, *,
                 f"{zst_path} is zstd-compressed but zstandard is not "
                 "installed (pip install .[zstd])")
         with open(zst_path, "rb") as f:
-            blob = zstandard.ZstdDecompressor().decompress(f.read())
+            raw = f.read()
+        _verify_shard(meta, os.path.basename(zst_path), raw)
+        blob = zstandard.ZstdDecompressor().decompress(raw)
     else:
         with open(raw_path, "rb") as f:
             blob = f.read()
+        _verify_shard(meta, os.path.basename(raw_path), blob)
     payload = msgpack.unpackb(blob, raw=False)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)

@@ -118,6 +118,72 @@ def ell_from_doc_lists(docs: Sequence[Sequence[tuple[int, float]]],
     return EllDocs(cols=cols, vals=vals, num_vocab=num_vocab)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1). The segment-capacity rule of the
+    live corpus: padded row capacity grows in pow2 steps so the device
+    program shapes stay stable between growth events."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def write_doc_row(cols: np.ndarray, vals: np.ndarray, row: int,
+                  doc: Sequence[tuple[int, float]], num_vocab: int, *,
+                  normalize: bool = True) -> None:
+    """Write one bag-of-words doc into row ``row`` of preallocated ELL
+    arrays, in place, clearing the remainder of the row to padding.
+
+    The normalization arithmetic is *identical* to `ell_from_doc_lists`
+    (python-float total, same accumulation order, same f32 cast), so a doc
+    written incrementally lands bit-for-bit equal to the same doc in a
+    one-shot build -- the foundation of the live corpus's incremental ==
+    batch contract. Duplicate word-ids within one doc occupy separate
+    slots, exactly as the one-shot builders store them (the engine sums
+    slot contributions, so duplicates are equivalent to a merged count,
+    though not bitwise so -- which is why both paths store them unmerged).
+    """
+    if len(doc) > cols.shape[1]:
+        raise ValueError(f"doc nnz {len(doc)} exceeds row width "
+                         f"{cols.shape[1]}")
+    cols[row, :] = num_vocab
+    vals[row, :] = 0.0
+    tot = sum(cnt for _, cnt in doc) if normalize else 1.0
+    for k, (wid, cnt) in enumerate(doc):
+        cols[row, k] = wid
+        vals[row, k] = cnt / tot if normalize else cnt
+
+
+def ell_with_capacity(ell: EllDocs, capacity: int, *,
+                      nnz_max: int | None = None) -> EllDocs:
+    """Grow an ELL to ``capacity`` rows (and optionally a wider nnz_max),
+    the new slots all padding. The live corpus's segment-growth primitive:
+    unlike `pad_docs` this may also widen the nnz axis, so a delta segment
+    can absorb a doc longer than anything it has seen."""
+    nz = ell.nnz_max if nnz_max is None else nnz_max
+    if capacity < ell.num_docs:
+        raise ValueError(f"cannot shrink: {capacity} < {ell.num_docs}")
+    if nz < ell.nnz_max:
+        raise ValueError(f"cannot narrow: {nz} < {ell.nnz_max}")
+    if capacity == ell.num_docs and nz == ell.nnz_max:
+        return ell
+    cols = np.full((capacity, nz), ell.num_vocab, np.int32)
+    vals = np.zeros((capacity, nz), np.float32)
+    cols[:ell.num_docs, :ell.nnz_max] = ell.cols
+    vals[:ell.num_docs, :ell.nnz_max] = ell.vals
+    return EllDocs(cols=cols, vals=vals, num_vocab=ell.num_vocab)
+
+
+def doc_lists_from_ell(ell: EllDocs) -> list[list[tuple[int, float]]]:
+    """Recover bag-of-words (word_id, weight) docs from an ELL (pad slots
+    dropped; empty/pad rows come back as empty docs). The ingest bridge:
+    a frozen corpus built by `make_corpus` feeds a live corpus through
+    this (with normalize=False -- the weights are already normalized)."""
+    docs = []
+    for j in range(ell.num_docs):
+        live = ell.vals[j] != 0.0
+        docs.append(list(zip(ell.cols[j][live].tolist(),
+                             ell.vals[j][live].tolist())))
+    return docs
+
+
 def pad_docs(ell: EllDocs, num_docs: int) -> EllDocs:
     """Pad the doc axis to ``num_docs`` with empty documents (for even shards)."""
     if num_docs < ell.num_docs:

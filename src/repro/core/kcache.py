@@ -218,6 +218,26 @@ class KCache:
         if float(lamb) != self.lamb:
             self.invalidate(lamb)
 
+    def invalidate_ids(self, word_ids) -> int:
+        """Drop exactly the rows for ``word_ids``; returns how many were
+        resident. The scoped invalidation for *embedding* updates: a row is
+        a pure function of (word_id, lambda, vecs), so changing the vectors
+        of some words poisons only those words' rows. Corpus mutations, by
+        contrast, need NO invalidation at all -- rows never depend on which
+        documents exist (see `serving.wmd_service.WMDService.add_docs`)."""
+        dropped = 0
+        for wid in word_ids:
+            s = self._slot_of.pop(int(wid), None)
+            if s is None:
+                continue
+            self._id_of[s] = -1
+            self._last_used[s] = 0
+            self._free.append(s)
+            dropped += 1
+        if dropped:
+            self.stats.invalidations += 1
+        return dropped
+
     def _alloc_slots(self, n: int) -> list[int]:
         """Free slots first, then exact-LRU eviction among rows not touched
         this tick (the current batch's hits are pinned by construction)."""

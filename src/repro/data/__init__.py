@@ -1,5 +1,8 @@
 """Data pipelines: synthetic WMD corpus + LM token batches."""
 from repro.data.corpus import WMDData, make_corpus, zipf_query_stream
+from repro.data.live_corpus import LiveCorpus
 from repro.data.tokens import TokenPipeline, batch_struct
+from repro.data.wal import WalWriter, replay
 
-__all__ = ["WMDData", "make_corpus", "zipf_query_stream", "TokenPipeline", "batch_struct"]
+__all__ = ["WMDData", "make_corpus", "zipf_query_stream", "TokenPipeline",
+           "batch_struct", "LiveCorpus", "WalWriter", "replay"]

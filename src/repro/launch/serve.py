@@ -116,6 +116,20 @@ def main():
                     help="offline mode: rerank batching strategy (both "
                          "are bitwise-identical; union runs (Q, chunk) "
                          "programs instead of Q x (1, chunk))")
+    ap.add_argument("--ingest-stream", type=int, default=0, metavar="N",
+                    help="sinkhorn-wmd serving loop: build the service "
+                         "over a live WAL-backed corpus and interleave N "
+                         "seeded add/remove ops through the coalescer's "
+                         "writer lane (requires --coalesce-window-ms)")
+    ap.add_argument("--live-dir", default="",
+                    help="live-corpus directory (snapshots + WAL); an "
+                         "existing directory is *recovered*, so a killed "
+                         "run resumes with every acked write. Default: a "
+                         "fresh temp dir")
+    ap.add_argument("--compact-every", type=int, default=0, metavar="OPS",
+                    help="ingest mode: run an (interruptible, atomically "
+                         "swapped) corpus compaction every OPS ingest ops "
+                         "(0 = never)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     args = ap.parse_args()
@@ -147,15 +161,38 @@ def main():
             # before the service exists: every compile from here on is
             # persisted / looked up in the cache directory
             enable_compilation_cache(args.cache_dir)
+        if args.ingest_stream and args.coalesce_window_ms <= 0:
+            ap.error("--ingest-stream requires --coalesce-window-ms > 0 "
+                     "(writes go through the coalescer's writer lane)")
         cfg = wmd_cfg.smoke_config() if args.smoke else wmd_cfg.config()
         data = make_corpus(vocab_size=cfg.vocab_size,
                            embed_dim=cfg.embed_dim, num_docs=cfg.num_docs,
                            num_queries=args.num_queries,
                            query_words=min(cfg.v_r - 1, 19))
-        svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
-                         impl=args.impl,
-                         docs_chunk=args.docs_chunk or None,
-                         tol=args.tol)
+        if args.ingest_stream:
+            import tempfile
+            from repro.core.formats import doc_lists_from_ell
+            from repro.data import LiveCorpus
+            live_dir = args.live_dir or tempfile.mkdtemp(prefix="wmd-live-")
+            # the corpus stores already-normalized weights (make_corpus
+            # emits a normalized ELL), so segment rebuilds must not
+            # re-normalize
+            live = LiveCorpus(live_dir, cfg.vocab_size, normalize=False)
+            if live.num_live == 0:
+                seed_docs = doc_lists_from_ell(data.ell)
+                live.add_docs(list(range(len(seed_docs))), seed_docs)
+                print(f"[serve-wmd] live corpus seeded: "
+                      f"{live.num_live} docs at {live_dir}")
+            else:
+                print(f"[serve-wmd] live corpus recovered: "
+                      f"{live.num_live} docs, gen {live.gen} at {live_dir}")
+            svc = WMDService.from_live(mesh, cfg, vecs=data.vecs, live=live,
+                                       impl=args.impl, tol=args.tol)
+        else:
+            svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs,
+                             ell=data.ell, impl=args.impl,
+                             docs_chunk=args.docs_chunk or None,
+                             tol=args.tol)
         if args.offline:
             _serve_wmd_offline(svc, args)
             return
@@ -351,6 +388,42 @@ def _serve_wmd_loop(svc, cfg, args):
         submit = lambda r: co.submit_top_k(r, args.top_k)   # noqa: E731
     else:
         submit = co.submit
+    wfuts: list = []
+    if args.ingest_stream:
+        # seeded writer stream: mostly upserts of fresh doc ids, some
+        # removes of existing ones, paced to spread over the query stream;
+        # every op goes through the coalescer's writer lane so write
+        # batches interleave with (and order against) query batches
+        wrng = np.random.default_rng(1)
+        next_id = [svc.live.num_live]
+        done = [0]
+        every = max(1, args.requests // max(args.ingest_stream, 1))
+
+        def maybe_ingest(i: int) -> None:
+            if done[0] >= args.ingest_stream or i % every:
+                return
+            done[0] += 1
+            if wrng.random() < 0.25 and next_id[0] > 0:
+                victim = int(wrng.integers(0, next_id[0]))
+                wfuts.append(co.submit_remove_docs([victim]))
+            else:
+                nw = int(wrng.integers(2, min(8, cfg.v_r)))
+                wids = wrng.choice(cfg.vocab_size, size=nw, replace=False)
+                cnts = wrng.integers(1, 5, size=nw).astype(np.float64)
+                cnts /= cnts.sum()          # corpus stores normalized docs
+                doc = [(int(w), float(c)) for w, c in zip(wids, cnts)]
+                wfuts.append(co.submit_add_docs([next_id[0]], [doc]))
+                next_id[0] += 1
+            if args.compact_every and done[0] % args.compact_every == 0:
+                svc.compact()       # interruptible; serialized vs dispatch
+
+        base_submit = submit
+        counter = [0]
+
+        def submit(r):              # noqa: F811 -- deliberate wrap
+            maybe_ingest(counter[0])
+            counter[0] += 1
+            return base_submit(r)
     print(f"[serve-wmd] serving loop: {args.requests} zipf queries"
           + (f" (top-{args.top_k} pruned)" if args.top_k else "") + ", "
           f"window={args.coalesce_window_ms:g} ms "
@@ -396,6 +469,15 @@ def _serve_wmd_loop(svc, cfg, args):
               f"deadline_misses={st.deadline_misses}"
               + (f" hit_rate={st.hit_rate:.2f}"
                  if st.hit_rate is not None else ""))
+        if args.ingest_stream:
+            acked = sum(1 for f in wfuts
+                        if f.done() and f.exception() is None)
+            ls = svc.live.stats()
+            print(f"[serve-wmd] ingest: {acked}/{len(wfuts)} write ops "
+                  f"acked over {st.write_dispatches} dispatches "
+                  f"(+{st.docs_added}/-{st.docs_removed} docs), "
+                  f"gen={ls['gen']} live={ls['num_live']} "
+                  f"delta={ls['delta_rows']} wal={ls['wal_bytes']}B")
         if guard is not None:
             gs = guard.stats()
             stalled = watchdog.check()

@@ -42,6 +42,18 @@ Serving architecture (queue -> dispatcher -> engine)
   out that one dispatch before its own cut -- under mixed traffic,
   deadline budgets should leave one foreign service time of slack (the
   same slack a request arriving behind an already-full bucket needs).
+* **Writer lane** -- ``submit_add_docs(ids, docs)`` / ``submit_remove_docs
+  (ids)`` enqueue live-corpus mutations (services built via
+  `WMDService.from_live`) through the same admission queue: FIFO against
+  queries (read-your-writes: a query submitted after a write ack
+  dispatches after the write applied), homogeneous cuts per op, and a
+  write dispatch merges its batch into ONE durable ``add_docs`` /
+  ``remove_docs`` call -- ingest bursts amortize WAL fsyncs the way query
+  bursts amortize programs. Write futures resolve to the acked doc count
+  once the mutation is WAL-fsynced; writes bypass the resilience guard
+  (durability is the corpus's contract, a degraded write has no meaning)
+  and contribute ``write_dispatches`` / ``docs_added`` / ``docs_removed``
+  to `ServingStats` instead of program-shape telemetry.
 * **Dispatch triggers** -- a batch is cut when the first of these fires
   (per-dispatch counts are in `ServingStats`):
     - *fill*:     the ``max_batch`` Q bucket is full (``max_batch`` is
@@ -149,6 +161,10 @@ class ServingStats:
     breaker_transitions: int = 0  # circuit-breaker state changes
     breaker_open: int = 0         # rungs currently not closed
     brownout_active: bool = False
+    # writer lane (live-corpus ingest; all zero on a read-only service)
+    write_dispatches: int = 0     # add/remove batches dispatched
+    docs_added: int = 0           # docs durably acked via submit_add_docs
+    docs_removed: int = 0         # ids durably logged via submit_remove_docs
 
     @property
     def degraded_fraction(self) -> float:
@@ -166,6 +182,10 @@ class _Request:
     priority: int
     k: int | None = None          # top-k request (None = plain distances);
                                   # batches are cut homogeneous per kind
+    op: str = "plain"             # "plain" | "top_k" | "add" | "remove";
+                                  # write ops carry their payload in ``r``
+                                  # ((ids, docs) resp. ids) and cut into
+                                  # their own homogeneous batches
     popped: bool = False          # left the queue (dispatched or discarded);
                                   # lazily expires stale deadline-heap entries
 
@@ -276,6 +296,9 @@ class QueryCoalescer:
         self._deadline_misses = 0
         self._quarantined = 0
         self._degraded = 0
+        self._write_dispatches = 0
+        self._docs_added = 0
+        self._docs_removed = 0
         # EWMA of the per-request deadline-miss indicator: one of the two
         # brownout overload signals (queue depth is the other)
         self._miss_ewma = 0.0
@@ -290,12 +313,13 @@ class QueryCoalescer:
         self._hit_rate_sum = 0.0
         self._hit_rate_n = 0
         self._service_est_s = 0.0             # combined (ServingStats)
-        # per-kind estimates for the deadline trigger: a pruned top-k
+        # per-op estimates for the deadline trigger: a pruned top-k
         # dispatch (bound + per-query rerank loop) costs orders of
-        # magnitude more than a plain query_batch, and feeding one shared
+        # magnitude more than a plain query_batch (and a WAL-fsync write
+        # batch costs differently than either), and feeding one shared
         # EWMA would make plain deadlines fire absurdly early (degenerate
         # batch-of-1 cuts) and top-k deadlines far too late
-        self._service_est_kind: dict[bool, float] = {}
+        self._service_est_kind: dict[str, float] = {}
         self._warmed_shapes = 0
         self._warmup_compile_s: dict[str, float] | None = None
         self.batch_log: collections.deque[tuple[int, ...]] = \
@@ -337,12 +361,47 @@ class QueryCoalescer:
         correctness."""
         if k < 1:
             raise ValueError("k must be >= 1")
-        return self._submit(r, int(k), deadline_ms, priority, timeout)
+        return self._submit(r, int(k), deadline_ms, priority, timeout,
+                            op="top_k")
 
-    def _submit(self, r: np.ndarray, k: int | None,
+    def submit_add_docs(self, ids, docs, *, deadline_ms: float | None = None,
+                        priority: int = 0,
+                        timeout: float | None = None) -> Future:
+        """Writer lane: enqueue a durable live-corpus upsert; the Future
+        resolves to the number of docs acked (WAL-fsynced -- see
+        `WMDService.add_docs`) once the write batch dispatches.
+
+        Writes ride the same admission queue (FIFO order against queries
+        is preserved, backpressure applies) but cut into their OWN
+        homogeneous batches: a write dispatch merges consecutive queued
+        add requests into one ``svc.add_docs`` call, so ingest bursts
+        amortize WAL fsyncs exactly like query bursts amortize programs.
+        Writes bypass the resilience guard -- durability is the corpus's
+        WAL contract, and a degraded 'add' has no meaning."""
+        if len(ids) != len(docs):
+            raise ValueError(f"{len(ids)} ids but {len(docs)} docs")
+        if not hasattr(self.svc, "add_docs"):
+            raise ValueError("service has no live corpus (add_docs)")
+        return self._submit((list(ids), list(docs)), None, deadline_ms,
+                            priority, timeout, op="add")
+
+    def submit_remove_docs(self, ids, *, deadline_ms: float | None = None,
+                           priority: int = 0,
+                           timeout: float | None = None) -> Future:
+        """Writer lane: enqueue a durable live-corpus remove; the Future
+        resolves to the number of ids durably logged (removing a
+        never-added id is a logged no-op, so the count acks durability,
+        not prior existence). Same batching/ordering rules as
+        `submit_add_docs`."""
+        if not hasattr(self.svc, "remove_docs"):
+            raise ValueError("service has no live corpus (remove_docs)")
+        return self._submit(list(ids), None, deadline_ms, priority,
+                            timeout, op="remove")
+
+    def _submit(self, r, k: int | None,
                 deadline_ms: float | None, priority: int,
-                timeout: float | None) -> Future:
-        if self.validate:
+                timeout: float | None, op: str = "plain") -> Future:
+        if self.validate and op in ("plain", "top_k"):
             try:
                 if self._vocab_size is not None:
                     _guards.validate_query(r, self._vocab_size)
@@ -380,7 +439,7 @@ class QueryCoalescer:
                     else deadline_ms / 1e3)
             req = _Request(seq=self._seq, r=r, future=Future(), t_submit=now,
                            deadline=None if dl_s is None else now + dl_s,
-                           priority=priority, k=k)
+                           priority=priority, k=k, op=op)
             self._seq += 1
             (self._hi if priority > 0 else self._lo).append(req)
             if req.deadline is not None:
@@ -513,7 +572,10 @@ class QueryCoalescer:
                 cancelled=self._cancelled,
                 deadline_misses=self._deadline_misses,
                 quarantined=self._quarantined,
-                degraded=self._degraded)
+                degraded=self._degraded,
+                write_dispatches=self._write_dispatches,
+                docs_added=self._docs_added,
+                docs_removed=self._docs_removed)
             counts = dict(self._dispatch_counts)
             hist = dict(sorted(self._batch_hist.items()))
             lat_snap = list(self._latencies)
@@ -580,11 +642,11 @@ class QueryCoalescer:
             # discarded at pop time -- either way its deadline must not
             # drive a premature dispatch
         if self._dl_heap:
-            # budget with the estimate of the deadline request's OWN kind
-            # (top-k and plain dispatches cost very differently); fall
-            # back to the combined EWMA before that kind's first sample
+            # budget with the estimate of the deadline request's OWN op
+            # (top-k / plain / write dispatches cost very differently);
+            # fall back to the combined EWMA before that op's first sample
             est = self._service_est_kind.get(
-                self._dl_heap[0][2].k is not None, self._service_est_s)
+                self._dl_heap[0][2].op, self._service_est_s)
             t_deadline = self._dl_heap[0][0] - est - _DEADLINE_MARGIN_S
         else:
             t_deadline = float("inf")
@@ -597,25 +659,29 @@ class QueryCoalescer:
     def _pop_batch_locked(self) -> list[_Request]:
         """Cut one batch: priority lane first, FIFO within each lane, and
         HOMOGENEOUS in kind -- the cut stops at the first request whose
-        (kind, k) differs from the batch head's, so a batch is always one
-        plain ``query_batch`` or one ``top_k_batch(k, prune=True)`` call
-        (the next cut picks up the other run; FIFO order is never
-        violated). Requests whose future a client already cancelled are
-        discarded here regardless of kind (never dispatched, never
-        resolved again -- `set_running_or_notify_cancel` also locks the
-        survivors against a later cancel, so the dispatcher's fan-out can
-        never hit InvalidStateError)."""
+        (op, k) differs from the batch head's, so a batch is always one
+        plain ``query_batch``, one ``top_k_batch(k, prune=True)``, one
+        merged ``add_docs``, or one merged ``remove_docs`` call (the next
+        cut picks up the other run; FIFO order is never violated --
+        which, for the writer lane, is exactly the read-your-writes
+        ordering argument: a query submitted after a write ack dispatches
+        after the write applied). Requests whose future a client already
+        cancelled are discarded here regardless of kind (never
+        dispatched, never resolved again -- `set_running_or_notify_cancel`
+        also locks the survivors against a later cancel, so the
+        dispatcher's fan-out can never hit InvalidStateError)."""
         batch: list[_Request] = []
         kind: object = None
         while self._depth_locked() and len(batch) < self.max_batch:
             lane = self._hi or self._lo
             head = lane[0]
-            if batch and not head.future.cancelled() and head.k != kind:
+            if batch and not head.future.cancelled() \
+                    and (head.op, head.k) != kind:
                 break               # kind change: leave it for the next cut
             rq = lane.popleft()
             rq.popped = True
             if rq.future.set_running_or_notify_cancel():
-                kind = rq.k
+                kind = (rq.op, rq.k)
                 batch.append(rq)
             else:
                 self._cancelled += 1
@@ -669,10 +735,33 @@ class QueryCoalescer:
         err: BaseException | None = None
         results: list = []
         kind = batch[0].k
-        kind_str = "plain" if kind is None else "top_k"
+        op = batch[0].op
+        kind_str = op
         degraded: DegradedResult | None = None
+        n_added = n_removed = 0
         try:
-            if self._guard is not None:
+            if op == "add":
+                # writer lane: merge the batch into ONE durable add_docs
+                # call (one WAL record + fsync for the whole burst); each
+                # future acks its own docs. Writes bypass the resilience
+                # guard -- durability is the corpus WAL's contract, and a
+                # crash surfaces as recovery, not as a retryable fault.
+                ids: list = []
+                docs: list = []
+                for rq in batch:
+                    ids.extend(rq.r[0])
+                    docs.extend(rq.r[1])
+                self.svc.add_docs(ids, docs)
+                results = [len(rq.r[0]) for rq in batch]
+                n_added = len(ids)
+            elif op == "remove":
+                ids = []
+                for rq in batch:
+                    ids.extend(rq.r)
+                self.svc.remove_docs(ids)
+                results = [len(rq.r) for rq in batch]
+                n_removed = len(ids)
+            elif self._guard is not None:
                 # resilient route: breaker ladder + retry + brownout
                 # (serving.resilience). Rung 0 is the exact call below, so
                 # fault-free dispatches stay bitwise identical.
@@ -686,32 +775,41 @@ class QueryCoalescer:
             else:
                 res = self.svc.top_k_batch(
                     [rq.r for rq in batch], kind, prune=True)
-            if kind is None:
+            if op == "plain":
                 results = [res[i] for i in range(len(batch))]
-            else:
+            elif op == "top_k":
                 idx, dist = res
                 results = [(idx[i], dist[i]) for i in range(len(batch))]
         except BaseException as e:            # noqa: BLE001 -- fan out to
             err = e                           # futures, keep serving
         t_done = time.monotonic()
         with self._lock:
+            is_write = op in ("add", "remove")
             info = getattr(self.svc, "last_batch_stats", None) or {}
-            if err is None and "hit_rate" in info:
+            # writes don't run the query engine: last_batch_stats is the
+            # PREVIOUS query dispatch's -- never fold it into hit_rate
+            if err is None and not is_write and "hit_rate" in info:
                 self._hit_rate_sum += float(info["hit_rate"])
                 self._hit_rate_n += 1
             ewma = 0.7 * self._service_est_s + 0.3 * (t_done - t0)
             self._service_est_s = ewma if self._service_est_s else t_done - t0
-            is_topk = batch[0].k is not None
-            prev = self._service_est_kind.get(is_topk)
-            self._service_est_kind[is_topk] = (
+            prev = self._service_est_kind.get(op)
+            self._service_est_kind[op] = (
                 t_done - t0 if prev is None
                 else 0.7 * prev + 0.3 * (t_done - t0))
             self._dispatch_counts[cause] += 1
             self._batch_hist[len(batch)] += 1
             self.batch_log.append(tuple(rq.seq for rq in batch))
-            self.shape_log.append(
-                ("plain" if batch[0].k is None else "top_k",
-                 len(batch), batch[0].k))
+            if is_write:
+                self._write_dispatches += 1
+                if err is None:
+                    self._docs_added += n_added
+                    self._docs_removed += n_removed
+            else:
+                # program-shape telemetry is query-only: a write dispatch
+                # compiles nothing, so it must not trip the warmup
+                # shape-coverage cross-check
+                self.shape_log.append((op, len(batch), batch[0].k))
             for rq in batch:
                 if err is None:
                     self._completed += 1

@@ -29,6 +29,13 @@ probability.
 ``dispatch_log`` records (idx, method, fault, payloads, result) for every
 intercepted call; the chaos suite replays the non-faulted compositions
 directly against a clean service to assert the bitwise no-fault contract.
+
+`CrashInjector` + `InjectedCrash` are the *data-path* counterpart: where
+`FaultyEngine` injects query-side faults at the engine boundary, the
+crash injector kills the writer at the live corpus's WAL / snapshot /
+compaction boundaries (hook-based, seeded per boundary index with the
+same ``default_rng((seed, idx))`` determinism) so the ingest chaos suite
+can assert crash-consistent recovery at every single kill site.
 """
 from __future__ import annotations
 
@@ -42,6 +49,69 @@ import numpy as np
 
 class InjectedFault(RuntimeError):
     """A fault raised by the injector (never by the real engine)."""
+
+
+class InjectedCrash(BaseException):
+    """A simulated process kill (kill -9) raised at a crash boundary.
+
+    Deliberately a BaseException, not an Exception: a real kill gives no
+    code the chance to clean up, so an injected one must sail through
+    every ``except Exception`` recovery handler in the write path --
+    anything those handlers would have repaired must instead be repaired
+    by *recovery from disk*, which is the property the chaos suite
+    asserts. Only the test harness (and the corpus lock's ``finally``
+    unwinding, which a real kill also cannot prevent from mattering --
+    the process is gone either way) may catch it."""
+
+
+class CrashInjector:
+    """Counting crash-point hook for the live corpus's write boundaries.
+
+    The corpus calls ``hook(name)`` at every WAL / snapshot / compaction
+    boundary (`data.wal.WalWriter` and `data.live_corpus.LiveCorpus` list
+    them). This hook counts the calls and raises `InjectedCrash` at a
+    chosen one, in either of two modes:
+
+      * **target mode** -- ``CrashInjector(target=i)`` crashes at exactly
+        the i-th boundary crossed (after ``match`` filtering). With
+        ``target=None`` nothing ever crashes and the hook is a pure
+        counter: the dry-run pass the chaos suite uses to *enumerate* the
+        boundaries of an op sequence before sweeping a crash over every
+        single one.
+      * **seeded mode** -- ``CrashInjector(seed=s, p_crash=p)`` draws the
+        crash decision per boundary index from ``default_rng((seed,
+        idx))``, the same replay-deterministic rule as `FaultSchedule`:
+        a schedule replays identically regardless of thread timing.
+
+    ``match`` restricts counting (and crashing) to boundaries whose name
+    contains the substring -- e.g. ``match="compact"`` sweeps compaction
+    boundaries only. ``log`` records every counted boundary name, so a
+    failing sweep names the exact kill site.
+    """
+
+    def __init__(self, target: int | None = None, *, seed: int | None = None,
+                 p_crash: float = 0.0, match: str | None = None):
+        self.target = target
+        self.seed = seed
+        self.p_crash = p_crash
+        self.match = match
+        self.count = 0
+        self.log: list[str] = []
+        self.crashed_at: tuple[int, str] | None = None
+
+    def __call__(self, name: str) -> None:
+        if self.match is not None and self.match not in name:
+            return
+        idx = self.count
+        self.count += 1
+        self.log.append(name)
+        crash = idx == self.target if self.target is not None else (
+            self.seed is not None and self.p_crash > 0.0
+            and np.random.default_rng((self.seed, idx)).random()
+            < self.p_crash)
+        if crash:
+            self.crashed_at = (idx, name)
+            raise InjectedCrash(f"injected crash at boundary {idx} ({name})")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -69,6 +69,16 @@ Service API
       single-query ``submit(r) -> Future`` calls into full `query_batch`
       dispatches (fill/window/deadline micro-batching, backpressure,
       ServingStats); `drain_async()` flushes every live front-end.
+  add_docs / remove_docs / compact -- live-corpus mutation, available on a
+      service built via `WMDService.from_live` over a
+      `data.live_corpus.LiveCorpus`: WAL-durable upserts/tombstones (the
+      return acks fsynced state), lazy per-segment device refresh, and
+      interruptible compaction. Live dispatches answer over the live doc
+      set in ascending-doc-id order, bitwise identical to a one-shot
+      build of the same docs (the incremental == batch contract); top-k
+      returns real doc ids via `live_doc_ids`. The K cache is never
+      invalidated by corpus mutation (rows don't depend on docs);
+      `invalidate_embedding_rows` is the scoped hook for vector updates.
 
 Perf knobs (constructor fields):
   impl           -- default contraction path for query_batch.
@@ -168,7 +178,7 @@ class WMDService:
     mesh: jax.sharding.Mesh
     cfg: wmd_cfg.WMDConfig
     vecs: np.ndarray
-    ell: formats.EllDocs
+    ell: formats.EllDocs | None = None
     impl: str = "fused"
     docs_chunk: int | None = None
     tol: float = 0.0
@@ -180,8 +190,26 @@ class WMDService:
     bound_impl: str = "fused"
     bound_docs_chunk: int | None = 256
     guards: bool = True
+    live: object | None = None          # data.live_corpus.LiveCorpus
+
+    @classmethod
+    def from_live(cls, mesh, cfg, vecs, live, **kw) -> "WMDService":
+        """Build a service over a mutable `data.live_corpus.LiveCorpus`.
+
+        The corpus's base segment becomes the service ELL; a delta segment
+        (and the tombstone gather map) is refreshed lazily before every
+        live dispatch (`_refresh_live`). ``add_docs`` / ``remove_docs`` /
+        ``compact`` then mutate the corpus through the service under the
+        engine lock."""
+        return cls(mesh=mesh, cfg=cfg, vecs=vecs, live=live, **kw)
 
     def __post_init__(self):
+        if self.live is not None:
+            # the base segment IS the service corpus; ell, if also passed,
+            # is ignored in favor of the live corpus's current base
+            self.ell = self.live.base_ell
+        if self.ell is None:
+            raise ValueError("WMDService needs either ell= or live=")
         model_size = self.mesh.shape["model"]
         self._rb = formats.rebucket_for_vocab_shards(self.ell, model_size)
         self._doc_axes = tuple(a for a in ("pod", "data")
@@ -225,6 +253,12 @@ class WMDService:
         # live async front-ends (async_service); weak so a shut-down
         # coalescer the caller dropped doesn't accumulate on the service
         self._coalescers: weakref.WeakSet = weakref.WeakSet()
+        # live-corpus device state (refreshed lazily; see _refresh_live).
+        # base state was just built from live.base_ell above, so only the
+        # delta/gather state starts stale.
+        self._live_base_version = (self.live.base_version
+                                   if self.live is not None else -1)
+        self._live_version = -1
 
     def async_service(self, **kw):
         """Async admission front-end: a `serving.coalescer.QueryCoalescer`
@@ -243,6 +277,186 @@ class WMDService:
         an empty queue and no in-flight batch (coalescers stay open)."""
         for co in list(self._coalescers):
             co.drain(timeout=timeout)
+
+    # -- live corpus (mutable base + delta segments) ----------------------
+    #
+    # With ``live`` set, every dispatch runs per-SEGMENT: the same stripes
+    # program solves the base and delta ELLs (corpus cols/vals are runtime
+    # arguments, so one compiled fn serves both shapes whenever their
+    # capacities match, and at most two shapes otherwise), and the results
+    # are gathered into ascending-doc-id order through the corpus's
+    # (segment, row) location map. Tombstoned/pad rows are solved but never
+    # gathered -- pad-slot inertness makes them free of side effects -- so
+    # per-doc distances are bitwise identical to a one-shot build of the
+    # same logical docs (the incremental == batch contract, pinned by the
+    # golden table's live_* routes and the ingest chaos suite).
+    #
+    # K-cache scoping: cached K rows are functions of (word_id, lambda,
+    # vecs) ONLY -- no row depends on which documents exist -- so corpus
+    # mutation invalidates NOTHING (the correctly-scoped invalidation set
+    # for a corpus mutation is empty; tests pin that resident rows survive
+    # add/remove/compact and still hit). Embedding updates are the event
+    # that poisons rows by word-id; `invalidate_embedding_rows` is that
+    # scoped hook (`core.kcache.KCache.invalidate_ids`). The RWMD bound
+    # tier needs no invalidation either: bounds are recomputed per call
+    # against the current segment ELLs.
+
+    def _require_live(self):
+        if self.live is None:
+            raise ValueError("this WMDService has no live corpus "
+                             "(construct with WMDService.from_live)")
+
+    def _refresh_live(self) -> None:
+        """Sync device state with the corpus (cheap when nothing changed).
+
+        base_version bump (a compaction swapped segments): rebuild the
+        rebucketed base, its sharded device arrays and the bound tier's
+        replicated ELL. version bump (any mutation): re-place the delta
+        segment and rebuild the gather map. Versions are read under the
+        engine lock, which every mutating service entry point also holds."""
+        lc = self.live
+        if lc.base_version != self._live_base_version:
+            self.ell = lc.base_ell
+            model_size = self.mesh.shape["model"]
+            self._rb = formats.rebucket_for_vocab_shards(self.ell,
+                                                         model_size)
+            _, self._cols_d, self._vals_d = shard_wmd_inputs(
+                self.mesh, self.vecs, self._rb.cols, self._rb.vals,
+                doc_axes=self._doc_axes)
+            self._ell_cols_d = jnp.asarray(self.ell.cols)
+            self._ell_vals_d = jnp.asarray(self.ell.vals)
+            self._empty_doc_mask = np.asarray(
+                self.ell.vals.sum(axis=-1) == 0)
+            self._live_base_version = lc.base_version
+            self._live_version = -1          # gather map must follow
+        if lc.version != self._live_version:
+            d_ell = lc.delta_ell
+            drb = formats.rebucket_for_vocab_shards(
+                d_ell, self.mesh.shape["model"])
+            self._dcols_d = jax.device_put(drb.cols, self._rerank_spec)
+            self._dvals_d = jax.device_put(drb.vals, self._rerank_spec)
+            self._dell_cols_d = jnp.asarray(d_ell.cols)
+            self._dell_vals_d = jnp.asarray(d_ell.vals)
+            ids, seg, row = lc.locations()
+            self._live_ids = ids
+            self._live_seg = seg
+            self._live_row = row
+            self._live_empty = lc.live_empty_mask()
+            self._live_version = lc.version
+
+    @_serialized
+    def _query_batch_live(self, rs: Sequence[np.ndarray],
+                          impl: str | None = None,
+                          use_cache: bool | None = None) -> np.ndarray:
+        """(Q, num_live) exact distances over the live corpus, columns in
+        ascending doc-id order. One K-cache stripes assembly feeds one
+        stripes dispatch per non-empty segment; a segment holding no live
+        doc is skipped outright. docs_chunk is forced to None -- segments
+        are capacity-bounded, and per-doc bits are chunking-independent
+        anyway, so one unchunked program per segment is the simplest
+        correct plan."""
+        self._refresh_live()
+        n_live = self._live_ids.size
+        q = len(rs)
+        if q == 0 or n_live == 0:
+            self.last_batch_stats = {}
+            return np.zeros((q, n_live), np.float32)
+        self._validate_queries(rs)
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        self._kcache.ensure_lamb(self.cfg.lamb)
+        use = use_cache is not False
+        t0 = time.perf_counter()
+        k_s, km_s, info = self._kcache.stripes_for_batch(sel_b, mask_b,
+                                                         use_cache=use)
+        jax.block_until_ready((k_s, km_s))
+        t_pre = time.perf_counter() - t0
+        self._check_km(km_s, mask_b)
+        fn = self._stripe_fn(impl or self.impl, None)
+        r_d = jnp.asarray(r_b)
+        out = np.empty((q, n_live), np.float32)
+        segments = 0
+        t0 = time.perf_counter()
+        for seg_id, (cols_d, vals_d) in enumerate(
+                ((self._cols_d, self._vals_d),
+                 (self._dcols_d, self._dvals_d))):
+            pick = self._live_seg == seg_id
+            if not pick.any():
+                continue
+            d_seg = np.asarray(fn(k_s, km_s, r_d, cols_d, vals_d))[:q]
+            out[:, pick] = d_seg[:, self._live_row[pick]]
+            segments += 1
+        t_solve = time.perf_counter() - t0
+        self.last_batch_stats = {"precompute_s": t_pre, "solve_s": t_solve,
+                                 "segments": segments, **info}
+        self._check_result(out, what="live query_batch distances",
+                           empty_doc_mask=self._live_empty)
+        return out
+
+    def _bounds_live(self, rs: Sequence[np.ndarray]) -> np.ndarray:
+        """(Q, num_live) RWMD lower bounds over the live corpus: one M-row
+        assembly, one prefilter program per non-empty segment, the same
+        ascending-id gather as the exact path."""
+        self._refresh_live()
+        n_live = self._live_ids.size
+        q = len(rs)
+        if q == 0 or n_live == 0:
+            return np.zeros((q, n_live), np.float32)
+        self._validate_queries(rs)
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        m_pad = rwmd_core.assemble_m_stripes(
+            sel_b, mask_b, self._vecs_d, b2=self._b2,
+            rows_bucket=self.cache_rows_bucket)
+        out = np.empty((q, n_live), np.float32)
+        for seg_id, (cols_d, vals_d) in enumerate(
+                ((self._ell_cols_d, self._ell_vals_d),
+                 (self._dell_cols_d, self._dell_vals_d))):
+            pick = self._live_seg == seg_id
+            if not pick.any():
+                continue
+            lb = np.asarray(rwmd_core.rwmd_bound_batch(
+                m_pad, cols_d, vals_d, impl=self.bound_impl,
+                docs_chunk=None))[:q]
+            out[:, pick] = lb[:, self._live_row[pick]]
+        return out
+
+    @property
+    def live_doc_ids(self) -> np.ndarray:
+        """Ascending doc ids of the live corpus -- result column j of a
+        live dispatch scores the doc ``live_doc_ids[j]`` (and live top-k
+        returns these ids, not positions)."""
+        self._require_live()
+        with self._engine_lock:
+            self._refresh_live()
+            return self._live_ids
+
+    @_serialized
+    def add_docs(self, ids, docs) -> int:
+        """Durable live upsert (see `data.live_corpus.LiveCorpus.add_docs`;
+        the return acknowledges WAL-fsynced docs). Device state refreshes
+        lazily at the next dispatch; the K cache is deliberately NOT
+        invalidated -- see the section comment above."""
+        self._require_live()
+        return self.live.add_docs(ids, docs)
+
+    @_serialized
+    def remove_docs(self, ids) -> int:
+        """Durable live remove; returns how many ids were actually live."""
+        self._require_live()
+        return self.live.remove_docs(ids)
+
+    @_serialized
+    def compact(self) -> None:
+        """Run one interruptible corpus compaction (base <- base + delta,
+        atomic swap); the next dispatch picks up the new base segment."""
+        self._require_live()
+        self.live.compact()
+
+    @_serialized
+    def invalidate_embedding_rows(self, word_ids) -> int:
+        """Scoped K-cache invalidation for *embedding* updates: drops
+        exactly the rows of ``word_ids`` (`KCache.invalidate_ids`).
+        Corpus mutations never need this -- rows don't depend on docs."""
+        return self._kcache.invalidate_ids(word_ids)
 
     # -- numeric guards ---------------------------------------------------
 
@@ -337,7 +551,10 @@ class WMDService:
 
     @_serialized
     def query(self, r: np.ndarray) -> np.ndarray:
-        """r: (V,) sparse query histogram -> (N,) distances."""
+        """r: (V,) sparse query histogram -> (N,) distances (num_live
+        columns in ascending doc-id order on a live service)."""
+        if self.live is not None:
+            return self._query_batch_live([r])[0]
         self._validate_queries([r])
         sel_idx, r_sel = select_query(r)
         sel_p, r_p, mask = pad_query(sel_idx, r_sel, self.cfg.v_r)
@@ -367,7 +584,15 @@ class WMDService:
         stripes baseline, bitwise identical to the cached path; True =
         stripes engine even with the cache disabled). Built fns are cached
         per (impl, docs_chunk).
+
+        Live services route every call through the per-segment dispatch
+        (`_query_batch_live`; docs_chunk is forced unchunked there) --
+        (Q, num_live) columns in ascending doc-id order, bitwise identical
+        to a one-shot build of the same docs.
         """
+        if self.live is not None:
+            return self._query_batch_live(rs, impl=impl,
+                                          use_cache=use_cache)
         if len(rs) == 0:
             return np.zeros((0, self.ell.num_docs), np.float32)
         self._validate_queries(rs)
@@ -461,8 +686,11 @@ class WMDService:
         argpartition's internal tie placement is arbitrary, and a
         deterministic selection rule is what lets every route (full scan,
         exhaustive chunked scan, pruned) return the *identical* set even
-        when the corpus contains duplicate docs."""
+        when the corpus contains duplicate docs. (On a live corpus the
+        positions are ascending-id order, so position ties ARE id ties.)"""
         k = min(k, d.shape[-1])
+        if k <= 0:                 # empty live corpus: (Q, 0) selections
+            return np.zeros((*d.shape[:-1], 0), np.int64)
         flat = d.reshape(-1, d.shape[-1])
         out = np.empty((flat.shape[0], k), np.int64)
         for i, row in enumerate(flat):
@@ -482,7 +710,10 @@ class WMDService:
             return idx[0], dist[0]
         d = self.query(r)
         idx = self._top_k(d, k)
-        return idx, d[idx]
+        dist = d[idx]
+        if self.live is not None and idx.size:
+            idx = self._live_ids[idx]      # positions -> real doc ids
+        return idx, dist
 
     def top_k_batch(self, rs: Sequence[np.ndarray], k: int = 10, *,
                     prune: bool = False, rerank: str = "per_query",
@@ -506,7 +737,13 @@ class WMDService:
         dispatches). Both return the bitwise-identical set: every solved
         (query, doc) distance comes from the same fixed-shape program
         family, and both prune only docs provably outside the top-k (see
-        `_top_k_union`)."""
+        `_top_k_union`).
+
+        Live services return REAL doc ids (ascending-id positions mapped
+        through `live_doc_ids`), and ``prune=True`` degrades transparently
+        to the exact full scan (`_top_k_live_fallback`): the answer is
+        identical by the pruned == scan contract, only the solves_avoided
+        speedup is forfeited until the pruned tier learns segments."""
         if rerank not in ("per_query", "union"):
             raise ValueError(f"rerank must be per_query|union, "
                              f"got {rerank!r}")
@@ -514,12 +751,17 @@ class WMDService:
             raise ValueError("rerank='union' is a pruned-rerank strategy; "
                              "pass prune=True")
         if prune:
+            if self.live is not None:
+                return self._top_k_live_fallback(rs, k, **kw)
             if rerank == "union":
                 return self._top_k_union(rs, k, **kw)
             return self._top_k_pruned(rs, k, exhaustive=False, **kw)
         d = self.query_batch(rs, **kw)
         idx = self._top_k(d, k)
-        return idx, np.take_along_axis(d, idx, axis=-1)
+        dist = np.take_along_axis(d, idx, axis=-1)
+        if self.live is not None and idx.size:
+            idx = self._live_ids[idx]      # positions -> real doc ids
+        return idx, dist
 
     def top_k_scan_batch(self, rs: Sequence[np.ndarray], k: int = 10,
                          **kw) -> tuple[np.ndarray, np.ndarray]:
@@ -528,7 +770,36 @@ class WMDService:
         select. Bitwise-identical to ``top_k_batch(prune=True)`` by
         construction of the shared prefix (identical programs on identical
         inputs) plus bound soundness for the pruned suffix."""
+        if self.live is not None:
+            return self._top_k_live_fallback(rs, k, **kw)
         return self._top_k_pruned(rs, k, exhaustive=True, **kw)
+
+    @_serialized
+    def _top_k_live_fallback(self, rs: Sequence[np.ndarray], k: int, *,
+                             impl: str | None = None,
+                             use_cache: bool | None = None,
+                             prune_chunk: int | None = None,
+                             prune_margin: float | None = None
+                             ) -> tuple[np.ndarray, np.ndarray]:
+        """Pruned-top-k fallback on a live corpus: the exact full scan
+        through the per-segment dispatch. The prune knobs are accepted and
+        ignored (there is nothing to prune); ``last_prune_stats`` records
+        the route so callers/benches see the forfeited speedup."""
+        t0 = time.perf_counter()
+        d = self._query_batch_live(rs, impl=impl, use_cache=use_cache)
+        q, n = d.shape
+        k_eff = min(k, n)
+        idx = self._top_k(d, k_eff)
+        dist = np.take_along_axis(d, idx, axis=-1)
+        self.last_prune_stats = {
+            "queries": q, "docs": n, "k": k_eff, "chunk": 0, "margin": 0.0,
+            "exhaustive": True, "rerank": "live_full_scan",
+            "exact_solves": q * n, "scan_solves": q * n,
+            "solves_avoided": 0.0, "rerank_programs": 0,
+            "bound_s": 0.0, "rerank_s": time.perf_counter() - t0,
+        }
+        ids = self._live_ids[idx] if idx.size else idx
+        return ids, dist
 
     # -- two-tier pruned retrieval ---------------------------------------
 
@@ -791,6 +1062,15 @@ class WMDService:
         bound at any budget (see core.rwmd). `serving.resilience` serves
         these (wrapped in `DegradedResult`, never raw) when the engine is
         browned out or every exact rung has failed."""
+        if self.live is not None:
+            t0 = time.perf_counter()
+            lb = self._bounds_live(rs)
+            self.last_batch_stats = {
+                "precompute_s": time.perf_counter() - t0, "solve_s": 0.0,
+                "degraded": True}
+            if self.guards and lb.size:
+                _guards.check_finite(lb, "rwmd bounds", lamb=self.cfg.lamb)
+            return lb
         if len(rs) == 0:
             return np.zeros((0, self.ell.num_docs), np.float32)
         self._validate_queries(rs)
@@ -812,12 +1092,15 @@ class WMDService:
         tie-deterministic selection as the exact paths, so a given bound
         matrix always yields the same id set."""
         lb = self.query_batch_bounds(rs)
-        k_eff = min(k, self.ell.num_docs)
+        k_eff = min(k, lb.shape[-1])
         if len(rs) == 0:
             return (np.zeros((0, k_eff), np.int64),
                     np.zeros((0, k_eff), np.float32))
         idx = self._top_k(lb, k_eff)
-        return idx, np.take_along_axis(lb, idx, axis=-1)
+        dist = np.take_along_axis(lb, idx, axis=-1)
+        if self.live is not None and idx.size:
+            idx = self._live_ids[idx]      # positions -> real doc ids
+        return idx, dist
 
     # -- ahead-of-time warmup ---------------------------------------------
 

@@ -1,0 +1,126 @@
+"""Checkpoint integrity satellites: async write failures surface instead
+of dying silently, shard checksums catch truncation/bit-flips, and
+`latest_step` falls back past corrupt or incomplete steps."""
+import glob
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.checkpoint import CheckpointCorruptionError
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(3,)).astype(np.float32))}
+
+
+def _shard_path(ckpt_dir, step):
+    (path,) = glob.glob(
+        os.path.join(ckpt_dir, f"step_{step:08d}", "shard_0.msgpack*"))
+    return path
+
+
+def _unwritable_dir(tmp_path):
+    """A checkpoint-dir path that cannot be written to: its parent is a
+    regular file, so makedirs fails with NotADirectoryError even for root
+    (plain chmod is ignored under CAP_DAC_OVERRIDE)."""
+    blocker = os.path.join(str(tmp_path), "blocker")
+    with open(blocker, "w") as f:
+        f.write("not a directory")
+    return os.path.join(blocker, "ckpts")
+
+
+def test_async_write_failure_raised_on_wait(tmp_path):
+    td = str(tmp_path / "good")
+    c = ckpt.AsyncCheckpointer(td)
+    c.save(1, _state())
+    c.wait()                                     # good save: no error
+    c.ckpt_dir = _unwritable_dir(tmp_path)       # now unwritable
+    c.save(2, _state())
+    with pytest.raises(OSError):
+        c.wait()                                 # background failure lands
+    c.wait()                                     # ... exactly once
+    assert ckpt.latest_step(td) == 1             # step 2 never appeared
+
+
+def test_async_write_failure_raised_on_next_save(tmp_path):
+    c = ckpt.AsyncCheckpointer(_unwritable_dir(tmp_path))
+    c.save(1, _state())
+    with pytest.raises(OSError):
+        c.save(2, _state())                      # save() waits first
+
+
+def test_truncated_shard_detected(tmp_path):
+    td = str(tmp_path)
+    state = _state()
+    ckpt.save(td, 1, state)
+    ckpt.save(td, 2, state)
+    shard = _shard_path(td, 2)
+    size = os.path.getsize(shard)
+    with open(shard, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(CheckpointCorruptionError, match="shard"):
+        ckpt.restore(td, 2, state)
+    # latest_step skips the corrupt step and lands on the last good one
+    assert ckpt.latest_step(td) == 1
+    r = ckpt.restore(td, 1, state)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(state["w"]))
+
+
+def test_bitflip_shard_detected(tmp_path):
+    td = str(tmp_path)
+    state = _state()
+    ckpt.save(td, 1, state)
+    ckpt.save(td, 5, state)
+    shard = _shard_path(td, 5)
+    with open(shard, "r+b") as f:
+        f.seek(os.path.getsize(shard) // 3)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0x10]))            # same length, wrong bits
+    with pytest.raises(CheckpointCorruptionError):
+        ckpt.restore(td, 5, state)
+    assert ckpt.latest_step(td) == 1
+
+
+def test_missing_meta_skipped_by_latest_step(tmp_path):
+    td = str(tmp_path)
+    state = _state()
+    ckpt.save(td, 1, state)
+    ckpt.save(td, 2, state)
+    os.remove(os.path.join(td, "step_00000002", "meta.json"))
+    assert ckpt.latest_step(td) == 1
+    os.remove(_shard_path(td, 1))                # shard gone entirely
+    assert ckpt.latest_step(td) is None
+
+
+def test_meta_carries_shard_checksum(tmp_path):
+    td = str(tmp_path)
+    ckpt.save(td, 3, _state())
+    with open(os.path.join(td, "step_00000003", "meta.json")) as f:
+        meta = json.load(f)
+    (name, rec), = meta["shards"].items()
+    assert name.startswith("shard_0.msgpack")
+    assert len(rec["sha256"]) == 64
+    assert rec["bytes"] == os.path.getsize(_shard_path(td, 3))
+
+
+def test_legacy_checkpoint_without_checksums_restores(tmp_path):
+    # checkpoints written before the "shards" key existed stay readable
+    td = str(tmp_path)
+    state = _state()
+    ckpt.save(td, 1, state)
+    meta_path = os.path.join(td, "step_00000001", "meta.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    del meta["shards"]
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    assert ckpt.latest_step(td) == 1             # trusted as-is
+    r = ckpt.restore(td, 1, state)
+    np.testing.assert_array_equal(np.asarray(r["b"]), np.asarray(state["b"]))

@@ -116,6 +116,66 @@ def _routes() -> dict:
 
     svc_legacy = WMDService(mesh=mesh, cfg=cfg, vecs=vecs, ell=ell)
     out["service_legacy"] = svc_legacy.query_batch(rs)
+
+    # live-corpus routes: the same docs through a WAL-backed LiveCorpus,
+    # three assembly histories that must all land on identical bits --
+    # the incremental == batch contract pinned absolutely. normalize=False
+    # because doc_lists_from_ell hands back already-normalized weights.
+    import tempfile
+
+    from repro.core import formats as fmt
+    from repro.data.live_corpus import LiveCorpus
+    from repro.serving.faultinject import CrashInjector, InjectedCrash
+
+    docs = fmt.doc_lists_from_ell(ell)
+    v = vecs.shape[0]
+
+    def live_service(lc):
+        return WMDService(mesh=mesh, cfg=cfg, vecs=vecs, live=lc,
+                          cache_capacity=64, prune_chunk=8,
+                          bound_docs_chunk=None)
+
+    # one-shot seeding: every doc in a single durable add
+    lc = LiveCorpus(tempfile.mkdtemp(prefix="golden-live1-"), v,
+                    normalize=False)
+    lc.add_docs(range(len(docs)), docs)
+    out["live_oneshot"] = live_service(lc).query_batch(rs)
+
+    # incremental assembly: shuffled adds, a wrong doc corrected by
+    # upsert, an extraneous doc removed again, a mid-way compaction
+    order = list(range(len(docs)))
+    np.random.default_rng(7).shuffle(order)
+    lc = LiveCorpus(tempfile.mkdtemp(prefix="golden-live2-"), v,
+                    normalize=False)
+    lc.add_docs([order[0]], [[(0, 1.0)]])          # wrong content first
+    for i in order[: len(order) // 2]:
+        lc.add_docs([i], [docs[i]])                # (order[0] corrected)
+    lc.add_docs([999], [docs[0]])                  # extraneous doc ...
+    lc.compact()
+    lc.remove_docs([999])                          # ... tombstoned again
+    for i in order[len(order) // 2:]:
+        lc.add_docs([i], [docs[i]])
+    out["live_incremental"] = live_service(lc).query_batch(rs)
+
+    # crash-recovered: killed inside compaction (pre-rename), reopened
+    # from WAL replay, finished, then compacted cleanly
+    hook = CrashInjector()
+    path = tempfile.mkdtemp(prefix="golden-live3-")
+    lc = LiveCorpus(path, v, normalize=False, crash_hook=hook)
+    for i in order[:16]:
+        lc.add_docs([i], [docs[i]])
+    hook.target = hook.count + 2                   # compact.snapshot.tmp
+    try:
+        lc.compact()
+        raise AssertionError("injected crash did not fire")
+    except InjectedCrash:
+        pass
+    lc = LiveCorpus(path, v, normalize=False)      # recover from disk
+    for i in order[16:]:
+        lc.add_docs([i], [docs[i]])
+    lc.add_docs([order[0]], [docs[order[0]]])      # upsert to the delta
+    lc.compact()
+    out["live_recovered"] = live_service(lc).query_batch(rs)
     return out
 
 
@@ -147,6 +207,11 @@ def test_golden_cross_route_consistency():
     np.testing.assert_array_equal(r["pruned_topk_idx"], r["scan_topk_idx"])
     np.testing.assert_array_equal(r["pruned_topk_dist"],
                                   r["scan_topk_dist"])
+    # the incremental == batch contract: every live-corpus assembly
+    # history lands on the frozen service's exact bits
+    np.testing.assert_array_equal(r["live_oneshot"], r["service_stripes"])
+    np.testing.assert_array_equal(r["live_incremental"], r["live_oneshot"])
+    np.testing.assert_array_equal(r["live_recovered"], r["live_oneshot"])
     # engine-vs-engine: fp32
     np.testing.assert_allclose(r["single_fused"], r["dense"],
                                rtol=2e-3, atol=1e-5)

@@ -1,0 +1,372 @@
+"""Ingest chaos suite: kill the writer at every WAL / snapshot /
+compaction boundary and assert crash-consistent recovery.
+
+The core contract, asserted bitwise: a corpus assembled incrementally --
+including crashes at seeded points and at *every enumerated* boundary --
+recovers to answer queries bit-for-bit identical to the same logical doc
+set built in one shot. And durability is one-directional: **no crash
+point loses an acknowledged write** (un-acked writes may surface or not;
+either is legal).
+
+Runs as its own CI step (seeded, under pytest-timeout), not in tier-1 --
+the boundary sweep re-runs recovery a few dozen times.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.data.live_corpus import LiveCorpus
+from repro.serving.faultinject import CrashInjector, InjectedCrash
+
+V = 96
+
+
+def _mk_doc(rng, nnz=None):
+    nnz = int(rng.integers(2, 8)) if nnz is None else nnz
+    wids = rng.choice(V, size=nnz, replace=False)
+    cnts = rng.integers(1, 9, size=nnz)
+    return [(int(w), float(c)) for w, c in zip(wids, cnts)]
+
+
+def _ops(seed, n=14):
+    """A deterministic mixed op sequence: adds, upserts, removes (of live
+    and never-added ids), an empty-doc upsert, and two compactions."""
+    rng = np.random.default_rng(seed)
+    ops, live = [], set()
+    for i in range(n):
+        ops.append(("add", [i], [_mk_doc(rng)]))
+        live.add(i)
+        if i == 3:
+            ops.append(("add", [1], [_mk_doc(rng)]))        # upsert
+        if i == 5:
+            ops.append(("remove", [2, 999]))                # live + never
+            live.discard(2)
+            ops.append(("add", [4], [[]]))                  # empty-doc upsert
+        if i in (6, 10):
+            ops.append(("compact",))
+    ops.append(("remove", [0]))
+    return ops
+
+
+def _apply(lc, op):
+    if op[0] == "add":
+        return lc.add_docs(op[1], op[2])
+    if op[0] == "remove":
+        return lc.remove_docs(op[1])
+    lc.compact()
+    return None
+
+
+def _reference_docs(seed):
+    """The crash-free run's final doc set -- the bitwise target."""
+    with _fresh(None, seed, "ref") as lc:
+        for op in _ops(seed):
+            _apply(lc, op)
+        return lc.live_docs()
+
+
+class _fresh:
+    """Context manager yielding a LiveCorpus in a throwaway subdir."""
+
+    def __init__(self, tmp_path, seed, tag, hook=None):
+        import tempfile
+        self.dir = tempfile.mkdtemp(prefix=f"chaos-{tag}-") \
+            if tmp_path is None else str(tmp_path / f"{tag}")
+        self.hook = hook
+
+    def __enter__(self):
+        self.lc = LiveCorpus(self.dir, V, crash_hook=self.hook)
+        return self.lc
+
+    def __exit__(self, *exc):
+        try:
+            self.lc.close()
+        except Exception:
+            pass
+        return False
+
+
+@functools.lru_cache(maxsize=4)
+def _boundaries(seed) -> int:
+    """Dry-run the op sequence with a counting hook to enumerate its
+    crash boundaries (target mode with no target = pure counter)."""
+    hook = CrashInjector()
+    with _fresh(None, seed, "dryrun", hook=hook) as lc:
+        for op in _ops(seed):
+            _apply(lc, op)
+    return hook.count
+
+
+def test_boundary_count_is_stable():
+    # the sweep's coverage claim rests on this enumeration being
+    # deterministic and spanning both WAL and compaction boundary kinds
+    n = _boundaries(7)
+    assert n == _boundaries(7)
+    hook = CrashInjector()
+    with _fresh(None, 7, "kinds", hook=hook) as lc:
+        for op in _ops(7):
+            _apply(lc, op)
+    kinds = set(hook.log)
+    assert {"wal.append.pre", "wal.append.torn", "wal.append.synced",
+            "compact.begin", "compact.built", "compact.snapshot.tmp",
+            "compact.renamed", "compact.done"} <= kinds
+
+
+@pytest.mark.parametrize("seed", [7])
+def test_crash_sweep_every_boundary(tmp_path, seed):
+    """Kill at boundary i for EVERY i; recover; finish; compare bitwise."""
+    ops = _ops(seed)
+    want = _reference_docs(seed)
+    n_boundaries = _boundaries(seed)
+    assert n_boundaries > 30            # sanity: the sweep is non-trivial
+
+    for target in range(n_boundaries):
+        hook = CrashInjector(target=target)
+        d = str(tmp_path / f"sweep{target}")
+        lc = LiveCorpus(d, V, crash_hook=hook)
+        acked = []                      # ops whose call RETURNED pre-crash
+        crashed_at = None
+        for i, op in enumerate(ops):
+            try:
+                _apply(lc, op)
+                acked.append(op)
+            except InjectedCrash:
+                crashed_at = i
+                break
+        assert crashed_at is not None, \
+            f"target {target} never fired ({hook.count} boundaries crossed)"
+        # simulate the kill: drop the instance, recover from disk only
+        del lc
+        rec = LiveCorpus(d, V)
+
+        # durability: every acked op's effect is visible after recovery
+        expect = {}
+        for op in acked:
+            if op[0] == "add":
+                for i_, d_ in zip(op[1], op[2]):
+                    expect[i_] = [(int(w), float(c)) for w, c in d_]
+            elif op[0] == "remove":
+                for i_ in op[1]:
+                    expect.pop(i_, None)
+        got = dict(rec.live_docs())
+        # ids the crashed (un-acked) op touches may legally hold either
+        # the pre-op or post-op value -- its fsync may or may not have
+        # landed before the kill; every OTHER acked id must be intact
+        crashed_op = ops[crashed_at]
+        in_flight = set(crashed_op[1]) \
+            if crashed_op[0] in ("add", "remove") else set()
+        for i_, doc in expect.items():
+            if i_ in in_flight:
+                continue
+            assert got.get(i_) == doc, \
+                (f"boundary {target} ({hook.crashed_at}): acked doc {i_} "
+                 f"lost or wrong after recovery")
+        # ... and any EXTRA ids must come from the crashed op, nothing else
+        extra = set(got) - set(expect)
+        assert extra <= in_flight, \
+            f"boundary {target}: phantom docs {extra - in_flight}"
+
+        # finish the run: re-apply the crashed op (idempotent upsert /
+        # remove / compact retry) and the rest, then compare bitwise
+        for op in ops[crashed_at:]:
+            _apply(rec, op)
+        assert rec.live_docs() == want, f"boundary {target} diverged"
+        rec.close()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_seeded_multi_crash_interleavings(tmp_path, seed):
+    """Seeded random kills (possibly several per run): recover after each
+    and keep going; the survivors' final state is bitwise the reference."""
+    ops = _ops(11)
+    want = _reference_docs(11)
+    d = str(tmp_path / f"seeded{seed}")
+    hook = CrashInjector(seed=seed, p_crash=0.04)
+    lc = LiveCorpus(d, V, crash_hook=hook)
+    i, crashes = 0, 0
+    while i < len(ops):
+        try:
+            _apply(lc, ops[i])
+            i += 1
+        except InjectedCrash:
+            crashes += 1
+            assert crashes < 100        # p=0.04 cannot livelock the run
+            del lc
+            lc = LiveCorpus(d, V, crash_hook=hook)  # hook keeps counting
+    assert lc.live_docs() == want, \
+        f"seed {seed} diverged after {crashes} crashes"
+    lc.close()
+
+
+def test_torn_wal_tail_recovers(tmp_path):
+    """A crash mid-record (the torn boundary) leaves a half-written tail;
+    recovery truncates it and the corpus reopens to the acked prefix."""
+    d = str(tmp_path / "torn")
+    hook = CrashInjector(target=7)      # 3 boundaries/append: crash is the
+    lc = LiveCorpus(d, V, crash_hook=hook)   # torn boundary of append #3
+    lc.add_docs([0], [[(1, 2.0)]])
+    lc.add_docs([1], [[(2, 1.0), (3, 1.0)]])
+    with pytest.raises(InjectedCrash):
+        lc.add_docs([2], [[(4, 1.0)]])
+    assert hook.crashed_at[1] == "wal.append.torn"
+    rec = LiveCorpus(d, V)
+    assert sorted(rec.live_ids().tolist()) == [0, 1]
+    rec.add_docs([2], [[(4, 1.0)]])     # and the log extends cleanly
+    assert sorted(rec.live_ids().tolist()) == [0, 1, 2]
+
+
+# -- service level: the incremental == batch bitwise contract -------------
+
+LAMB, MAX_ITER, TOP_K = 1.0, 8, 4
+
+
+@functools.lru_cache(maxsize=1)
+def _problem():
+    rng = np.random.default_rng(1234)
+    vecs = rng.normal(size=(V, 8)).astype(np.float32)
+    docs = {i: _mk_doc(rng) for i in range(12)}
+    rs = []
+    for i in range(3):
+        r = np.zeros(V, np.float32)
+        idx = rng.choice(V, 5 + 2 * i, replace=False)
+        r[idx] = rng.random(idx.size).astype(np.float32) + 0.1
+        r /= r.sum()
+        rs.append(r)
+    return vecs, docs, rs
+
+
+def _mk_service(**kw):
+    from repro.configs.sinkhorn_wmd import WMDConfig
+    from repro.launch.mesh import make_mesh
+    from repro.serving import WMDService
+    mesh = make_mesh((1, 1), ("data", "model"))
+    ell = kw.pop("ell", None)
+    live = kw.pop("live", None)
+    n = live.num_live if live is not None else ell.num_docs
+    nnz = live.base_ell.nnz_max if live is not None else ell.nnz_max
+    cfg = WMDConfig(name="chaos", vocab_size=V, embed_dim=8, num_docs=n,
+                    nnz_max=nnz, v_r=12, lamb=LAMB, max_iter=MAX_ITER)
+    return WMDService(mesh=mesh, cfg=cfg, vecs=_problem()[0], ell=ell,
+                      live=live, cache_capacity=64, prune_chunk=8,
+                      bound_docs_chunk=None, **kw)
+
+
+def test_service_bitwise_after_crash_and_recovery(tmp_path):
+    """The flagship assertion: shuffled adds + upserts + removes + a
+    compaction + a crash + recovery + more adds answers query_batch /
+    top_k / bounds BIT-FOR-BIT like a one-shot build of the same docs."""
+    vecs, docs, rs = _problem()
+    d = str(tmp_path / "svc")
+
+    # build incrementally, in shuffled order, with a wrong doc upserted
+    # over and a crash at a compaction boundary along the way
+    order = list(docs)
+    np.random.default_rng(5).shuffle(order)
+    hook = CrashInjector(target=None)
+    lc = LiveCorpus(d, V, crash_hook=hook)
+    lc.add_docs([order[0]], [[(0, 1.0)]])          # wrong content first
+    for i in order[:8]:
+        lc.add_docs([i], [docs[i]])                # (order[0] corrected)
+    lc.add_docs([99], [_mk_doc(np.random.default_rng(42))])
+    hook.target = hook.count + 3                   # inside the compaction
+    with pytest.raises(InjectedCrash):
+        lc.compact()
+    del lc
+    rec = LiveCorpus(d, V)                         # recover from disk
+    rec.remove_docs([99])
+    for i in order[8:]:
+        rec.add_docs([i], [docs[i]])
+    rec.compact()                                  # a clean one this time
+    assert dict(rec.live_docs()) == {
+        i: [(int(w), float(c)) for w, c in docs[i]] for i in docs}
+
+    live_svc = _mk_service(live=rec)
+    ref_ell = formats.ell_from_doc_lists(
+        [docs[i] for i in sorted(docs)], V)
+    ref_svc = _mk_service(ell=ref_ell)
+
+    d_live = live_svc.query_batch(rs)
+    d_ref = ref_svc.query_batch(rs)
+    np.testing.assert_array_equal(d_live, d_ref)
+
+    idx_l, dd_l = live_svc.top_k_batch(rs, TOP_K, prune=False)
+    idx_r, dd_r = ref_svc.top_k_batch(rs, TOP_K, prune=False)
+    np.testing.assert_array_equal(dd_l, dd_r)
+    np.testing.assert_array_equal(idx_l, idx_r)    # ids ARE doc ids here
+
+    # pruned top-k on live falls back to a transparent exact full scan --
+    # same answers, honest stats
+    idx_p, dd_p = live_svc.top_k_batch(rs, TOP_K, prune=True)
+    np.testing.assert_array_equal(dd_p, dd_r)
+    np.testing.assert_array_equal(idx_p, idx_r)
+    assert live_svc.last_prune_stats["rerank"] == "live_full_scan"
+
+    lb_l = live_svc.query_batch_bounds(rs)
+    lb_r = ref_svc.query_batch_bounds(rs)
+    np.testing.assert_array_equal(lb_l, lb_r)
+
+    # mutate again through the SERVICE api and re-check a route
+    new_doc = _mk_doc(np.random.default_rng(77))
+    live_svc.add_docs([50], [new_doc])
+    ref2 = formats.ell_from_doc_lists(
+        [docs[i] for i in sorted(docs)] + [new_doc], V)
+    np.testing.assert_array_equal(
+        live_svc.query_batch(rs),
+        _mk_service(ell=ref2).query_batch(rs))
+    rec.close()
+
+
+def test_kcache_survives_corpus_mutation(tmp_path):
+    """K-cache rows are functions of (word_id, lambda, vecs) only --
+    corpus mutation must invalidate NOTHING. Embedding-row invalidation
+    is the separately scoped hook."""
+    vecs, docs, rs = _problem()
+    lc = LiveCorpus(str(tmp_path / "kc"), V)
+    lc.add_docs(list(docs), [docs[i] for i in sorted(docs)])
+    svc = _mk_service(live=lc)
+    svc.query_batch(rs)
+    resident = svc.cache_resident
+    assert resident > 0
+    svc.add_docs([80], [[(3, 1.0)]])
+    svc.remove_docs([0])
+    svc.compact()
+    assert svc.cache_resident == resident          # untouched by mutation
+    svc.query_batch(rs)                            # still serves correctly
+    dropped = svc.invalidate_embedding_rows(
+        [int(np.flatnonzero(rs[0])[0])])
+    assert dropped >= 0                            # scoped hook works
+    lc.close()
+
+
+def test_coalescer_writer_lane_chaos(tmp_path):
+    """Reads and writes through the coalescer: merged write dispatches,
+    per-request acks, read-your-writes FIFO, final corpus == one-shot."""
+    from repro.serving import QueryCoalescer
+    vecs, docs, rs = _problem()
+    lc = LiveCorpus(str(tmp_path / "co"), V)
+    base = {i: docs[i] for i in sorted(docs)}
+    lc.add_docs(list(base), list(base.values()))
+    svc = _mk_service(live=lc)
+
+    with QueryCoalescer(svc, window_ms=4.0, max_batch=8) as co:
+        futs = []
+        for j in range(6):
+            futs.append(("w", co.submit_add_docs(
+                [100 + j], [_mk_doc(np.random.default_rng(j))])))
+            futs.append(("r", co.submit(rs[j % len(rs)])))
+        futs.append(("w", co.submit_remove_docs([100, 101])))
+        futs.append(("r", co.submit(rs[0])))
+        for kind, f in futs:
+            res = f.result(timeout=60)
+            if kind == "w":
+                assert res >= 1                    # ack = ids durably logged
+        st = co.stats()
+        assert st.write_dispatches >= 2
+        assert st.docs_added == 6 and st.docs_removed == 2
+
+    # read-your-writes: the post-remove read sees the shrunken corpus
+    assert sorted(svc.live_doc_ids.tolist()) == \
+        sorted(list(base) + [102, 103, 104, 105])
+    lc.close()

@@ -1,0 +1,256 @@
+"""LiveCorpus unit tests: upserts, tombstones, recovery, compaction, and
+the `core.formats` mutation edges the live path leans on. Pure numpy --
+no jax service here (the service-level contract lives in the golden table
+and the ingest chaos suite)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import formats
+from repro.data.live_corpus import LiveCorpus
+
+V = 32
+
+
+def _doc(rng, nnz=4):
+    wids = rng.choice(V, size=nnz, replace=False)
+    cnts = rng.integers(1, 10, size=nnz)
+    return [(int(w), float(c)) for w, c in zip(wids, cnts)]
+
+
+def _oneshot_ell(lc):
+    """The reference: one-shot build of the live doc set, ascending id."""
+    return formats.ell_from_doc_lists(
+        [d for _, d in lc.live_docs()], V,
+        nnz_align=lc.nnz_align, normalize=lc.normalize)
+
+
+def _live_rows(lc):
+    """(cols, vals) per live doc ascending -- what the result gather sees."""
+    ids, seg, row = lc.locations()
+    base, delta = lc.base_ell, lc.delta_ell
+    out = []
+    for s, r in zip(seg, row):
+        e = base if s == 0 else delta
+        out.append((e.cols[r], e.vals[r]))
+    return out
+
+
+def assert_rows_match_oneshot(lc):
+    """Every live row holds exactly the slots a one-shot build would,
+    bitwise (modulo trailing padding, which is inert by construction)."""
+    ref = _oneshot_ell(lc)
+    rows = _live_rows(lc)
+    assert len(rows) == ref.num_docs
+    for j, (cols, vals) in enumerate(rows):
+        live = ref.vals[j] != 0.0
+        got_live = vals != 0.0
+        np.testing.assert_array_equal(cols[got_live], ref.cols[j][live])
+        np.testing.assert_array_equal(vals[got_live], ref.vals[j][live])
+        assert (cols[~got_live] == V).all()     # dead slots are padding
+
+
+def test_empty_corpus(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    assert lc.num_live == 0
+    assert lc.base_ell.num_docs >= 0
+    assert lc.live_ids().size == 0
+    assert lc.stats()["gen"] == 0
+
+
+def test_add_remove_upsert(tmp_path):
+    rng = np.random.default_rng(0)
+    lc = LiveCorpus(str(tmp_path), V)
+    docs = {i: _doc(rng) for i in range(6)}
+    assert lc.add_docs(list(docs), list(docs.values())) == 6
+    assert lc.num_live == 6
+    assert_rows_match_oneshot(lc)
+
+    assert lc.remove_docs([2, 4]) == 2
+    assert lc.num_live == 4
+    assert set(lc.live_ids().tolist()) == {0, 1, 3, 5}
+    assert_rows_match_oneshot(lc)
+
+    new3 = _doc(rng, nnz=2)
+    lc.add_docs([3], [new3])                       # upsert replaces
+    assert lc.num_live == 4
+    assert dict(lc.live_docs())[3] == new3
+    assert_rows_match_oneshot(lc)
+
+
+def test_remove_never_added_id_is_noop(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([1], [[(0, 1.0)]])
+    assert lc.remove_docs([99]) == 0               # never added
+    assert lc.remove_docs([1]) == 1
+    assert lc.remove_docs([1]) == 0                # already gone
+    assert lc.num_live == 0
+    lc.close()
+    # the no-ops were logged; replay applies them as no-ops again
+    lc2 = LiveCorpus(str(tmp_path), V)
+    assert lc2.num_live == 0
+
+
+def test_empty_doc_upsert(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([0, 1], [[(3, 2.0)], []])          # empty doc is legal
+    assert lc.num_live == 2
+    np.testing.assert_array_equal(lc.live_empty_mask(), [False, True])
+    lc.add_docs([0], [[]])                         # upsert TO empty
+    np.testing.assert_array_equal(lc.live_empty_mask(), [True, True])
+    assert_rows_match_oneshot(lc)
+    lc.close()
+    lc2 = LiveCorpus(str(tmp_path), V)             # survives recovery
+    np.testing.assert_array_equal(lc2.live_empty_mask(), [True, True])
+
+
+def test_duplicate_word_ids_within_doc(tmp_path):
+    # duplicates occupy separate slots, exactly as ell_from_doc_lists
+    # stores them (the engine sums slot contributions)
+    doc = [(5, 1.0), (5, 2.0), (7, 1.0)]
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([0], [doc])
+    assert_rows_match_oneshot(lc)
+    (cols, vals), = _live_rows(lc)
+    assert cols[:3].tolist() == [5, 5, 7]
+    np.testing.assert_allclose(vals[:3], [0.25, 0.5, 0.25])
+
+
+def test_validation_rejects_before_wal(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    with pytest.raises(ValueError):
+        lc.add_docs([0], [[(V, 1.0)]])             # word id out of vocab
+    with pytest.raises(ValueError):
+        lc.add_docs([0], [[(1, -1.0)]])            # negative count
+    with pytest.raises(ValueError):
+        lc.add_docs([0], [[(1, float("nan"))]])    # non-finite
+    with pytest.raises(ValueError):
+        lc.add_docs([0, 1], [[]])                  # len mismatch
+    assert lc.num_live == 0
+    assert lc.stats()["wal_bytes"] == 0            # nothing was logged
+    lc.close()
+    assert LiveCorpus(str(tmp_path), V).num_live == 0
+
+
+def test_recovery_replays_wal(tmp_path):
+    rng = np.random.default_rng(1)
+    lc = LiveCorpus(str(tmp_path), V)
+    docs = {i: _doc(rng) for i in range(8)}
+    lc.add_docs(list(docs), list(docs.values()))
+    lc.remove_docs([0, 3])
+    lc.add_docs([1], [_doc(rng)])                  # upsert
+    want = lc.live_docs()
+    lc.close()
+
+    lc2 = LiveCorpus(str(tmp_path), V)             # no snapshot yet: replay
+    assert lc2.live_docs() == want
+    assert_rows_match_oneshot(lc2)
+
+
+def test_compaction_and_gc(tmp_path):
+    rng = np.random.default_rng(2)
+    lc = LiveCorpus(str(tmp_path), V)
+    docs = {i: _doc(rng) for i in range(5)}
+    lc.add_docs(list(docs), list(docs.values()))
+    lc.remove_docs([2])
+    want = lc.live_docs()
+    v_before = lc.base_version
+    lc.compact()
+    assert lc.gen == 1
+    assert lc.base_version > v_before
+    assert lc.stats()["delta_rows"] == 0           # delta merged into base
+    assert lc.live_docs() == want
+    assert_rows_match_oneshot(lc)
+    names = os.listdir(str(tmp_path))
+    assert "snapshot_00000001" in names
+    assert not any(n.endswith(".tmp") for n in names)
+    assert "wal_00000000.log" not in names         # old generation gc'd
+
+    lc.add_docs([9], [_doc(rng)])                  # keep mutating after
+    want = lc.live_docs()
+    lc.close()
+    lc2 = LiveCorpus(str(tmp_path), V)             # snapshot + replay
+    assert lc2.gen == 1
+    assert lc2.live_docs() == want
+    assert_rows_match_oneshot(lc2)
+
+
+def test_compaction_of_empty_corpus(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([0], [[(1, 1.0)]])
+    lc.remove_docs([0])
+    lc.compact()                                   # empty corpus snapshot
+    assert lc.num_live == 0
+    lc.close()
+    assert LiveCorpus(str(tmp_path), V).num_live == 0
+
+
+def test_delta_growth_rows_and_width(tmp_path):
+    rng = np.random.default_rng(3)
+    lc = LiveCorpus(str(tmp_path), V, min_capacity=2, nnz_align=4)
+    for i in range(9):                             # forces two row doublings
+        lc.add_docs([i], [_doc(rng, nnz=2)])
+    assert lc.stats()["delta_capacity"] >= 9
+    lc.add_docs([100], [_doc(rng, nnz=7)])         # forces nnz widening
+    assert lc.stats()["delta_nnz_max"] >= 8        # rounded to align
+    assert_rows_match_oneshot(lc)
+
+
+def test_bucket_by_length_with_empty_delta(tmp_path):
+    # the service's refresh rebuckets the delta even when it is empty
+    # (all-pad capacity rows); length-0 rows go to NO bucket (they scatter
+    # back as exact zeros) and the vocab-shard rebucket stays all-pad
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([0, 1], [[(1, 1.0)], [(2, 1.0), (3, 1.0)]])
+    lc.compact()                                   # delta is now empty
+    delta = lc.delta_ell
+    assert (delta.vals == 0.0).all()
+    rb = formats.bucket_by_length(delta)
+    assert rb.buckets == ()                        # stable: no phantom docs
+    rbs = formats.rebucket_for_vocab_shards(delta, 2)
+    assert (rbs.vals == 0.0).all()                 # all-pad in every shard
+    assert (rbs.cols == rbs.num_vocab).all()
+
+    # mixed case: live delta rows bucket, capacity pad rows are dropped,
+    # and scatter reassembles corpus order with zeros in the dropped slots
+    lc.add_docs([7], [[(4, 1.0)]])
+    delta = lc.delta_ell
+    rb = formats.bucket_by_length(delta)
+    assert sum(b.num_docs for b in rb.buckets) == 1
+    out = rb.scatter([np.full(b.num_docs, 9.0) for b in rb.buckets],
+                     delta.num_docs)
+    assert out[np.concatenate(rb.doc_ids)].tolist() == [9.0]
+    assert (np.delete(out, np.concatenate(rb.doc_ids)) == 0.0).all()
+
+
+def test_vocab_mismatch_rejected_on_open(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([0], [[(1, 1.0)]])
+    lc.compact()
+    lc.close()
+    with pytest.raises(ValueError, match="vocab"):
+        LiveCorpus(str(tmp_path), V * 2)
+
+
+def test_snapshot_checksum_detects_corruption(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V)
+    lc.add_docs([0], [[(1, 1.0)]])
+    lc.compact()
+    lc.close()
+    blob_path = os.path.join(str(tmp_path), "snapshot_00000001",
+                             "docs.msgpack")
+    with open(blob_path, "r+b") as f:
+        b = f.read(1)
+        f.seek(0)
+        f.write(bytes([b[0] ^ 0x01]))
+    with pytest.raises(RuntimeError, match="checksum"):
+        LiveCorpus(str(tmp_path), V)
+
+
+def test_normalize_false_preserves_weights(tmp_path):
+    lc = LiveCorpus(str(tmp_path), V, normalize=False)
+    lc.add_docs([0], [[(1, 0.25), (2, 0.75)]])
+    (cols, vals), = _live_rows(lc)
+    np.testing.assert_array_equal(vals[:2], np.float32([0.25, 0.75]))
+    assert_rows_match_oneshot(lc)
