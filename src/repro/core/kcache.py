@@ -146,11 +146,16 @@ class KCache:
                    program; also the bit-reproducibility guarantee above).
       kexp_impl:   "jnp" (`core.sinkhorn.precompute_rows`) or "kernel" (the
                    row-subset Pallas kexp; single-shard meshes only).
+      metrics:     optional `repro.obs.MetricsRegistry`; when set, every
+                   KCacheStats counter is mirrored into ``wmd_kcache_*``
+                   registry metrics at the same mutation sites, making the
+                   cache scrapeable live. None = no mirroring, no overhead.
     """
 
     def __init__(self, capacity: int, vecs, lamb: float, *,
                  mesh=None, model_axis: str = "model",
-                 rows_bucket: int = 128, kexp_impl: str = "jnp"):
+                 rows_bucket: int = 128, kexp_impl: str = "jnp",
+                 metrics=None):
         if kexp_impl not in ("jnp", "kernel"):
             raise ValueError(f"kexp_impl must be 'jnp' or 'kernel', "
                              f"got {kexp_impl!r}")
@@ -177,7 +182,37 @@ class KCache:
                           else None)
         self._alloc_buffers()
         self.stats = KCacheStats()
+        self._m = None
+        if metrics is not None:
+            self._m = {
+                "lookups": metrics.counter(
+                    "wmd_kcache_lookups_total",
+                    "stripes_for_batch calls"),
+                "hit_rows": metrics.counter(
+                    "wmd_kcache_hit_rows_total",
+                    "unique rows served from the resident store"),
+                "miss_rows": metrics.counter(
+                    "wmd_kcache_miss_rows_total",
+                    "unique rows computed fresh"),
+                "evictions": metrics.counter(
+                    "wmd_kcache_evictions_total", "LRU evictions"),
+                "bypasses": metrics.counter(
+                    "wmd_kcache_bypasses_total",
+                    "calls that skipped the resident store"),
+                "invalidations": metrics.counter(
+                    "wmd_kcache_invalidations_total",
+                    "full or scoped row invalidations"),
+                "resident": metrics.gauge(
+                    "wmd_kcache_resident_rows",
+                    "rows currently resident"),
+            }
         self._reset_map()
+
+    def _mirror(self, name: str, n: float = 1) -> None:
+        """Mirror a KCacheStats bump into the registry (no-op unattached)."""
+        if self._m is not None:
+            self._m[name].inc(n)
+            self._m["resident"].set(len(self._slot_of))
 
     def _alloc_buffers(self):
         """Fresh all-zero row buffers (+1 row: the reserved zero row pad
@@ -211,6 +246,7 @@ class KCache:
         if lamb is not None:
             self.lamb = float(lamb)
         self.stats.invalidations += 1
+        self._mirror("invalidations")
 
     def ensure_lamb(self, lamb: float):
         """Invalidate iff ``lamb`` differs from the store's key (rows are
@@ -236,6 +272,7 @@ class KCache:
             dropped += 1
         if dropped:
             self.stats.invalidations += 1
+            self._mirror("invalidations")
         return dropped
 
     def _alloc_slots(self, n: int) -> list[int]:
@@ -253,6 +290,7 @@ class KCache:
                 del self._slot_of[int(self._id_of[s])]
                 self._id_of[s] = -1
             self.stats.evictions += need
+            self._mirror("evictions", need)
             slots.extend(int(s) for s in order[:need])
         return slots
 
@@ -293,6 +331,7 @@ class KCache:
         sel_b = np.asarray(sel_b)
         ids = np.unique(sel_b)                       # sorted: stable dedup
         self.stats.lookups += 1
+        self._mirror("lookups")
         cached = use_cache and 0 < len(ids) <= self.capacity
         if not cached:
             return self._transient(ids, sel_b, row_mask, use_cache)
@@ -342,6 +381,9 @@ class KCache:
         n_hit, n_miss = int(hit.sum()), len(miss_ids)
         self.stats.hit_rows += n_hit
         self.stats.miss_rows += n_miss
+        if self._m is not None:
+            self._mirror("hit_rows", n_hit)
+            self._mirror("miss_rows", n_miss)
         slots_b = slot_arr[np.searchsorted(ids, sel_b)]
         # pad query rows gather the reserved zero row (index capacity)
         slots_b = np.where(np.asarray(row_mask) > 0, slots_b,
@@ -363,7 +405,9 @@ class KCache:
             # bypassed (use_cache=False) never had anything to hit, so they
             # count only as bypasses -- not into the hit-rate denominator.
             self.stats.miss_rows += len(ids)
+            self._mirror("miss_rows", len(ids))
         self.stats.bypasses += 1
+        self._mirror("bypasses")
         parts = [(k_r, km_r) for _, k_r, km_r in self._compute_chunks(ids)]
         zero = jnp.zeros((self.num_shards, 1, self.vloc + 1), jnp.float32)
         k_t = jnp.concatenate([p[0] for p in parts] + [zero], axis=1)

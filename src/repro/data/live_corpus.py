@@ -101,17 +101,25 @@ class LiveCorpus:
       normalize:   normalize doc weights at ELL-build time (pass False
                    when feeding already-normalized weights).
       crash_hook:  test-only boundary callback (see module docstring).
+      tracer:      optional `repro.obs` tracer; WAL/compaction boundaries
+                   are recorded as structured events (also settable after
+                   construction via the ``tracer`` property).
     """
 
     def __init__(self, path: str, num_vocab: int, *, nnz_align: int = 8,
                  min_capacity: int = 8, normalize: bool = True,
-                 crash_hook: Callable[[str], None] | None = None):
+                 crash_hook: Callable[[str], None] | None = None,
+                 tracer=None):
         self.path = path
         self.num_vocab = int(num_vocab)
         self.nnz_align = int(nnz_align)
         self.min_capacity = max(int(min_capacity), 1)
         self.normalize = bool(normalize)
         self._hook = crash_hook or _no_hook
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        self._tracer = tracer
         self._lock = threading.RLock()
         self.version = 0
         self.base_version = 0
@@ -134,7 +142,30 @@ class LiveCorpus:
             elif rec["op"] == "remove":
                 self._apply_remove(rec["ids"])
         self._wal = wal_mod.WalWriter(self._wal_path(self.gen),
-                                      hook=self._hook)
+                                      hook=self._hook, tracer=self._tracer)
+
+    # -- observability -----------------------------------------------------
+    # compaction/WAL boundaries are emitted to an optional repro.obs tracer
+    # alongside (and strictly BEFORE) the test-only crash hook, so even an
+    # injected-crash run leaves the boundary it died at in the event log.
+    # The tracer is late-bindable: `lc.tracer = t` after construction also
+    # rebinds the open WAL writer.
+
+    @property
+    def tracer(self):
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, t) -> None:
+        self._tracer = t
+        wal = getattr(self, "_wal", None)
+        if wal is not None:
+            wal.tracer = t
+
+    def _boundary(self, name: str, **fields) -> None:
+        if self._tracer.enabled:
+            self._tracer.event(name, gen=self.gen, **fields)
+        self._hook(name)
 
     # -- paths / snapshot io ----------------------------------------------
 
@@ -185,7 +216,7 @@ class LiveCorpus:
             json.dump(meta, f)
             f.flush()
             os.fsync(f.fileno())
-        self._hook("compact.snapshot.tmp")
+        self._boundary("compact.snapshot.tmp")
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -320,23 +351,24 @@ class LiveCorpus:
         writers queue behind it; killed anywhere, the old segments stay
         live and a retry is idempotent."""
         with self._lock:
-            self._hook("compact.begin")
+            self._boundary("compact.begin", docs=len(self._docs))
             ids = sorted(self._docs)
             docs = [self._docs[i] for i in ids]
-            self._hook("compact.built")
+            self._boundary("compact.built")
             new_gen = self.gen + 1
             self._write_snapshot(new_gen, ids, docs)
             # the rename landed: generation new_gen is durable. Everything
             # below is in-memory swap + cleanup; a crash here recovers to
             # new_gen with an empty delta -- the same logical corpus.
-            self._hook("compact.renamed")
+            self._boundary("compact.renamed")
             old_wal = self._wal
             self._wal = wal_mod.WalWriter(self._wal_path(new_gen),
-                                          hook=self._hook)
+                                          hook=self._hook,
+                                          tracer=self._tracer)
             old_wal.close()
             self.gen = new_gen
             self._install_base()
-            self._hook("compact.done")
+            self._boundary("compact.done")
             self._gc(keep_gen=new_gen)
 
     def _gc(self, keep_gen: int) -> None:

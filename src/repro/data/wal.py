@@ -60,10 +60,23 @@ class WalWriter:
     under its own lock."""
 
     def __init__(self, path: str, *,
-                 hook: Callable[[str], None] | None = None):
+                 hook: Callable[[str], None] | None = None,
+                 tracer=None):
         self.path = path
         self._hook = hook or _no_hook
+        # optional repro.obs tracer: WAL boundaries land in the structured
+        # event log. Fired BEFORE the crash hook at each boundary, so an
+        # injected (or real) crash still leaves its boundary on record.
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
         self._f = open(path, "ab")
+
+    def _boundary(self, name: str, **fields) -> None:
+        if self.tracer.enabled:
+            self.tracer.event(name, path=self.path, **fields)
+        self._hook(name)
 
     def append(self, record) -> int:
         """Durably append one msgpack-able record; returns the end offset.
@@ -75,16 +88,16 @@ class WalWriter:
         replay truncates away."""
         payload = msgpack.packb(record, use_bin_type=True)
         crc = zlib.crc32(payload) & 0xFFFFFFFF
-        self._hook("wal.append.pre")
+        self._boundary("wal.append.pre", bytes=len(payload))
         half = len(payload) // 2
         self._f.write(_HDR.pack(len(payload), crc))
         self._f.write(payload[:half])
         self._f.flush()
-        self._hook("wal.append.torn")
+        self._boundary("wal.append.torn")
         self._f.write(payload[half:])
         self._f.flush()
         os.fsync(self._f.fileno())
-        self._hook("wal.append.synced")
+        self._boundary("wal.append.synced")
         return self._f.tell()
 
     def sync(self) -> None:

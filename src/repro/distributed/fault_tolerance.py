@@ -132,19 +132,26 @@ class ServingWatchdog:
                  on_strike: Optional[Callable[[str], None]] = None,
                  pending_fn: Optional[Callable[[], int]] = None,
                  min_samples: int = 5,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tracer=None):
         self.policy = policy or FaultPolicy()
         self.on_strike = on_strike
         self.pending_fn = pending_fn
         self.min_samples = max(1, min_samples)
         self.clock = clock
+        # optional repro.obs tracer (late-bindable attribute): strikes and
+        # stall detections land in the structured event log
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        self.tracer = tracer
         self._lock = threading.Lock()
         self._kinds: dict[str, _KindTrack] = {}
         self._last_beat = clock()       # any-kind liveness
 
     def beat(self, kind: str, wall_s: float, ok: bool) -> None:
         """One dispatch completed (the coalescer heartbeat callback)."""
-        strike_cb = None
+        strike_cb, struck = None, False
         with self._lock:
             now = self.clock()
             self._last_beat = now
@@ -164,9 +171,13 @@ class ServingWatchdog:
                 if tr.strikes >= self.policy.straggler_strikes:
                     tr.strikes = 0
                     tr.tripped += 1
+                    struck = True
                     strike_cb = self.on_strike
             else:
                 tr.strikes = 0
+        if struck:
+            self.tracer.event("watchdog.strike", kind=kind,
+                              wall_s=round(float(wall_s), 6))
         if strike_cb is not None:
             try:
                 strike_cb(kind)
@@ -181,8 +192,11 @@ class ServingWatchdog:
             return []
         now = self.clock()
         with self._lock:
-            return [kind for kind, tr in self._kinds.items()
-                    if now - tr.last_seen > self.policy.timeout_s]
+            stalled = [kind for kind, tr in self._kinds.items()
+                       if now - tr.last_seen > self.policy.timeout_s]
+        for kind in stalled:
+            self.tracer.event("watchdog.stalled", kind=kind)
+        return stalled
 
     def report(self) -> dict[str, dict]:
         """Per-kind counters for the serving loop's final stats dump."""

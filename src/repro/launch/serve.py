@@ -130,6 +130,19 @@ def main():
                     help="ingest mode: run an (interruptible, atomically "
                          "swapped) corpus compaction every OPS ingest ops "
                          "(0 = never)")
+    ap.add_argument("--metrics-port", type=int, default=-1, metavar="PORT",
+                    help="serving loop: serve the live metrics registry as "
+                         "Prometheus text exposition on this port (0 = an "
+                         "ephemeral port, printed at startup; -1 = off)")
+    ap.add_argument("--trace-out", default="", metavar="TRACE.json",
+                    help="serving loop: record per-request span trees and "
+                         "write a Perfetto-loadable Chrome trace here on "
+                         "exit (structured events stream to "
+                         "TRACE.json.events.jsonl while serving)")
+    ap.add_argument("--stats-out", default="", metavar="STATS.json",
+                    help="serving loop: persist the final ServingStats + "
+                         "warmup/resilience/watchdog reports as JSON on "
+                         "clean exit AND on SIGINT")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
     args = ap.parse_args()
@@ -336,6 +349,32 @@ def _serve_wmd_offline(svc, args):
         _report_cache_flush()
 
 
+def _dump_serving_stats(path, st, warmup_report, guard, watchdog, svc,
+                        wall_s):
+    """Persist the final serving report as one JSON document.
+
+    Called from the serving loop's ``finally`` block, so clean exit and
+    SIGINT both leave the same artifact; everything in it is plain
+    scalars (ServingStats asdict + the warmup / resilience / watchdog /
+    live-corpus report dicts)."""
+    import dataclasses
+    import json
+    payload = {
+        "wall_s": wall_s,
+        "serving": dataclasses.asdict(st),
+        "warmup": warmup_report.summary() if warmup_report else None,
+        "resilience": (dataclasses.asdict(guard.stats())
+                       if guard is not None else None),
+        "watchdog": watchdog.report() if watchdog is not None else None,
+        "live_corpus": (svc.live.stats()
+                        if getattr(svc, "live", None) is not None else None),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    print(f"[serve-wmd] stats persisted at {path}")
+    return payload
+
+
 def _serve_wmd_loop(svc, cfg, args):
     """Async serving loop: Zipf stream -> QueryCoalescer -> query_batch.
 
@@ -352,6 +391,20 @@ def _serve_wmd_loop(svc, cfg, args):
     stream = zipf_query_stream(vocab_size=cfg.vocab_size,
                                query_words=min(cfg.v_r - 1, 13), seed=0)
     qs = [next(stream) for _ in range(args.requests)]
+    # observability: one registry for the whole stack (service K-cache
+    # counters already mirror into svc.metrics), one optional tracer
+    tracer = metrics_srv = exporter = None
+    if args.trace_out:
+        from repro.obs import JsonlExporter, Tracer
+        tracer = Tracer()
+        exporter = JsonlExporter(tracer, args.trace_out + ".events.jsonl")
+        if getattr(svc, "live", None) is not None:
+            svc.live.tracer = tracer      # WAL + compaction boundaries
+    if args.metrics_port >= 0:
+        from repro.obs import MetricsServer
+        metrics_srv = MetricsServer(svc.metrics, port=args.metrics_port)
+        print(f"[serve-wmd] metrics: http://localhost:{metrics_srv.port}"
+              f"/metrics")
     guard = watchdog = None
     if args.resilience or args.brownout_queue:
         from repro.distributed.fault_tolerance import (FaultPolicy,
@@ -360,18 +413,22 @@ def _serve_wmd_loop(svc, cfg, args):
         policy = ResiliencePolicy(
             brownout_queue_hi=args.brownout_queue or None,
             brownout_queue_lo=max((args.brownout_queue or 0) // 4, 0))
-        guard = EngineGuard(svc, policy)
+        guard = EngineGuard(svc, policy, tracer=tracer,
+                            metrics=svc.metrics)
         # dispatch-kind heartbeats: straggler strikes force-open the
         # active rung's breaker (demote); liveness is polled in `finally`
         watchdog = ServingWatchdog(
             FaultPolicy(timeout_s=30.0),
-            on_strike=lambda kind: guard.trip(kind))
+            on_strike=lambda kind: guard.trip(kind),
+            tracer=tracer)
     co = svc.async_service(window_ms=args.coalesce_window_ms,
                            max_batch=args.max_batch,
                            max_queue=args.max_queue,
                            default_deadline_ms=args.deadline_ms or None,
                            resilience=guard,
-                           heartbeat=watchdog.beat if watchdog else None)
+                           heartbeat=watchdog.beat if watchdog else None,
+                           metrics=svc.metrics,
+                           tracer=tracer)
     if watchdog is not None:
         # stalled-dispatcher detection only counts silence as a stall
         # while work is actually pending
@@ -379,11 +436,11 @@ def _serve_wmd_loop(svc, cfg, args):
     # registry warmup: one pass compiles every shape this coalescer can
     # dispatch (pow2 buckets x kinds), so no live dispatch pays compile
     # time; per-shape compile seconds land in ServingStats
-    rep = co.warm_registry(ks=(args.top_k,) if args.top_k else (),
-                           queries=qs)
-    print(f"[serve-wmd] warmup: {len(rep.registry)} shapes, "
-          f"{rep.compiles} compiles ({rep.compile_s:.2f}s), "
-          f"{rep.persistent_hits} persisted-cache hits")
+    warm_rep = co.warm_registry(ks=(args.top_k,) if args.top_k else (),
+                                queries=qs)
+    print(f"[serve-wmd] warmup: {len(warm_rep.registry)} shapes, "
+          f"{warm_rep.compiles} compiles ({warm_rep.compile_s:.2f}s), "
+          f"{warm_rep.persistent_hits} persisted-cache hits")
     if args.top_k:
         submit = lambda r: co.submit_top_k(r, args.top_k)   # noqa: E731
     else:
@@ -496,6 +553,19 @@ def _serve_wmd_loop(svc, cfg, args):
                       f"{rep['tripped']} strikes tripped, "
                       f"median {rep['median_wall_s'] * 1e3:.1f} ms")
         # SIGINT lands here too: leave the persisted cache state on record
+        if args.stats_out:
+            _dump_serving_stats(args.stats_out, st, warm_rep, guard,
+                                watchdog, svc, dt)
+        if tracer is not None:
+            if exporter is not None:
+                exporter.close()
+            tracer.export_chrome(args.trace_out)
+            print(f"[serve-wmd] trace: {args.trace_out} "
+                  f"({len(tracer.completed)} request trees, "
+                  f"{tracer.open_count} left open) + event log at "
+                  f"{args.trace_out}.events.jsonl")
+        if metrics_srv is not None:
+            metrics_srv.close()
         _report_cache_flush()
 
 

@@ -1,0 +1,36 @@
+"""repro.obs: dependency-free observability for the serving stack.
+
+Three parts (see ``docs/observability.md`` for the naming scheme and
+operator quickstart):
+
+- :mod:`repro.obs.metrics` -- thread-safe counter/gauge/histogram
+  registry; the single backing store ``ServingStats`` and the K-cache
+  stats are views over.
+- :mod:`repro.obs.trace` -- per-request span trees + structured event
+  log, exportable as Chrome trace-event JSON (Perfetto) and JSONL.
+- :mod:`repro.obs.export` -- Prometheus text exposition, a stdlib HTTP
+  scrape endpoint, and a periodic JSONL event flusher.
+
+The whole package is stdlib-only and bitwise-neutral: recorders never
+touch arrays, and observability-off is the shared :data:`NULL_TRACER`
+no-op with zero hot-path cost.
+"""
+from .export import JsonlExporter, MetricsServer, render_prometheus
+from .metrics import (DEFAULT_SIZE_BUCKETS, DEFAULT_TIME_BUCKETS, Counter,
+                      Gauge, Histogram, MetricsRegistry)
+from .trace import NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "DEFAULT_TIME_BUCKETS",
+    "DEFAULT_SIZE_BUCKETS",
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "render_prometheus",
+    "MetricsServer",
+    "JsonlExporter",
+]

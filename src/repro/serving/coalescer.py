@@ -113,6 +113,9 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import guards as _guards
+from repro.obs.metrics import (DEFAULT_SIZE_BUCKETS, DEFAULT_TIME_BUCKETS,
+                               MetricsRegistry)
+from repro.obs.trace import NULL_TRACER
 from repro.serving.resilience import (DegradedResult, EngineGuard,
                                       ResiliencePolicy)
 
@@ -244,6 +247,27 @@ class QueryCoalescer:
                       dispatch -- the `distributed.fault_tolerance.
                       ServingWatchdog` wiring point (liveness + straggler
                       strikes). Exceptions from it are swallowed.
+      metrics:        a `repro.obs.MetricsRegistry` that becomes the
+                      backing store of every `ServingStats` counter
+                      (``wmd_requests_*`` / ``wmd_dispatches_total`` /
+                      latency + batch-size histograms + phase-seconds
+                      counters) -- scrape it live via `repro.obs.export`.
+                      None creates a private registry, so each coalescer's
+                      stats stay independent by default; pass the
+                      *service's* registry (as `launch.serve` does) to get
+                      the whole stack -- coalescer + K cache + guard -- in
+                      one scrape namespace. Do NOT share one registry
+                      across concurrently-live coalescers whose stats you
+                      read individually: counters are get-or-create by
+                      name, so sharing sums them.
+      tracer:         a `repro.obs.Tracer` recording one span tree per
+                      submitted request (queue wait, dispatch, engine
+                      phase attribution, status) plus quarantine events;
+                      it is also attached to a guard the coalescer
+                      constructs (breaker/brownout/degraded events).
+                      None (default) = the shared no-op recorder, zero
+                      hot-path cost. Tracing never touches result arrays
+                      -- obs-on is bitwise identical to obs-off.
     """
 
     def __init__(self, svc, *, window_ms: float = 5.0, max_batch: int = 16,
@@ -252,7 +276,9 @@ class QueryCoalescer:
                  batch_log_size: int = 4096, latency_window: int = 10_000,
                  validate: bool = True,
                  resilience: "ResiliencePolicy | EngineGuard | None" = None,
-                 heartbeat: Callable[[str, float, bool], None] | None = None):
+                 heartbeat: Callable[[str, float, bool], None] | None = None,
+                 metrics: MetricsRegistry | None = None,
+                 tracer=None):
         if backpressure not in ("block", "reject"):
             raise ValueError(f"backpressure must be block|reject, "
                              f"got {backpressure!r}")
@@ -270,10 +296,19 @@ class QueryCoalescer:
         # services (no cfg) get the finite-only check
         self._vocab_size = getattr(getattr(svc, "cfg", None),
                                    "vocab_size", None)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._tracer = tracer if tracer is not None else NULL_TRACER
         if resilience is None or isinstance(resilience, EngineGuard):
             self._guard = resilience
+            # attach our tracer to a prebuilt guard that has none, so
+            # breaker/brownout events land in the same log as the spans
+            if (self._guard is not None and tracer is not None
+                    and self._guard.tracer is NULL_TRACER):
+                self._guard.tracer = self._tracer
         else:
-            self._guard = EngineGuard(svc, resilience)
+            self._guard = EngineGuard(svc, resilience,
+                                      tracer=self._tracer,
+                                      metrics=self.metrics)
         self._heartbeat = heartbeat
 
         self._lock = threading.Lock()
@@ -287,18 +322,57 @@ class QueryCoalescer:
         self._seq = 0
         self._in_flight = 0
 
-        # counters (under _lock)
-        self._submitted = 0
-        self._completed = 0
-        self._rejected = 0
-        self._failed = 0
-        self._cancelled = 0
-        self._deadline_misses = 0
-        self._quarantined = 0
-        self._degraded = 0
-        self._write_dispatches = 0
-        self._docs_added = 0
-        self._docs_removed = 0
+        # counters (mutated under _lock; backed by the metrics registry --
+        # ServingStats is a *view* over these, and the same objects are
+        # what a live Prometheus scrape reads)
+        mx = self.metrics
+        self._c = {
+            "submitted": mx.counter("wmd_requests_submitted_total",
+                                    "requests admitted to the queue"),
+            "completed": mx.counter("wmd_requests_completed_total",
+                                    "requests resolved with a result"),
+            "rejected": mx.counter("wmd_requests_rejected_total",
+                                   "backpressure rejections"),
+            "failed": mx.counter("wmd_requests_failed_total",
+                                 "requests whose dispatch raised"),
+            "cancelled": mx.counter("wmd_requests_cancelled_total",
+                                    "futures cancelled while queued"),
+            "deadline_misses": mx.counter("wmd_deadline_misses_total",
+                                          "requests served past deadline"),
+            "quarantined": mx.counter("wmd_requests_quarantined_total",
+                                      "invalid queries rejected at submit"),
+            "degraded": mx.counter("wmd_requests_degraded_total",
+                                   "requests answered bound-only"),
+            "write_dispatches": mx.counter("wmd_write_dispatches_total",
+                                           "merged add/remove dispatches"),
+            "docs_added": mx.counter("wmd_docs_added_total",
+                                     "docs durably acked via the writer "
+                                     "lane"),
+            "docs_removed": mx.counter("wmd_docs_removed_total",
+                                       "ids durably logged for removal"),
+        }
+        self._c_disp = {
+            trig: mx.counter("wmd_dispatches_total",
+                             "batches cut, by trigger",
+                             labels={"trigger": trig})
+            for trig in ("fill", "window", "deadline", "drain")}
+        self._c_phase = {
+            ph: mx.counter("wmd_phase_seconds_total",
+                           "engine wall seconds attributed per phase",
+                           labels={"phase": ph})
+            for ph in ("precompute", "solve", "bound", "rerank")}
+        self._h_batch = mx.histogram("wmd_batch_size",
+                                     "requests per dispatched batch",
+                                     buckets=DEFAULT_SIZE_BUCKETS)
+        self._h_latency = mx.histogram("wmd_request_latency_seconds",
+                                       "submit -> result-set latency",
+                                       buckets=DEFAULT_TIME_BUCKETS)
+        self._g_queue = mx.gauge("wmd_queue_depth",
+                                 "requests waiting (both lanes)")
+        self._g_inflight = mx.gauge("wmd_in_flight",
+                                    "requests inside the current dispatch")
+        self._g_est = mx.gauge("wmd_service_estimate_seconds",
+                               "EWMA dispatch wall time")
         # EWMA of the per-request deadline-miss indicator: one of the two
         # brownout overload signals (queue depth is the other)
         self._miss_ewma = 0.0
@@ -306,8 +380,6 @@ class QueryCoalescer:
         # an O(queue) scan per wakeup; entries whose request already left the
         # queue (popped) are expired at read time
         self._dl_heap: list[tuple[float, int, _Request]] = []
-        self._dispatch_counts = {"fill": 0, "window": 0, "deadline": 0,
-                                 "drain": 0}
         self._batch_hist: collections.Counter = collections.Counter()
         self._latencies = collections.deque(maxlen=latency_window)
         self._hit_rate_sum = 0.0
@@ -410,9 +482,16 @@ class QueryCoalescer:
                       and not np.isfinite(r).all()):
                     raise _guards.InvalidQueryError(
                         "query has non-finite entries")
-            except _guards.InvalidQueryError:
+            except _guards.InvalidQueryError as e:
                 with self._lock:
-                    self._quarantined += 1
+                    self._c["quarantined"].inc()
+                # a quarantined request never opens a span (it is never
+                # enqueued) but still leaves exactly one closed tree --
+                # the chaos suite's submitted == closed invariant
+                if self._tracer.enabled:
+                    self._tracer.event("quarantine", op=op,
+                                       error=str(e)[:200])
+                    self._tracer.closed_request(status="quarantined", op=op)
                 raise
         with self._lock:
             if self._closed:
@@ -422,13 +501,13 @@ class QueryCoalescer:
                                  else time.monotonic() + timeout)
                 while self._depth_locked() >= self.max_queue:
                     if self.backpressure == "reject":
-                        self._rejected += 1
+                        self._c["rejected"].inc()
                         raise QueueFullError(
                             f"admission queue full ({self.max_queue})")
                     remaining = (None if deadline_wait is None
                                  else deadline_wait - time.monotonic())
                     if remaining is not None and remaining <= 0:
-                        self._rejected += 1
+                        self._c["rejected"].inc()
                         raise QueueFullError(
                             f"blocked submit timed out after {timeout}s")
                     self._space.wait(timeout=remaining)
@@ -444,7 +523,11 @@ class QueryCoalescer:
             (self._hi if priority > 0 else self._lo).append(req)
             if req.deadline is not None:
                 heapq.heappush(self._dl_heap, (req.deadline, req.seq, req))
-            self._submitted += 1
+            self._c["submitted"].inc()
+            self._g_queue.set(self._depth_locked())
+            if self._tracer.enabled:
+                self._tracer.begin_request(req.seq, t0=now, op=op, k=k,
+                                           priority=priority)
             self._work.notify()
             return req.future
 
@@ -532,9 +615,14 @@ class QueryCoalescer:
                         if req.future.set_running_or_notify_cancel():
                             req.future.set_exception(
                                 CoalescerClosedError("shutdown(drain=False)"))
-                            self._failed += 1
+                            self._c["failed"].inc()
+                            self._tracer.end_request(
+                                req.seq, status="failed",
+                                reason="shutdown(drain=False)")
                         else:                  # client already cancelled it
-                            self._cancelled += 1
+                            self._c["cancelled"].inc()
+                            self._tracer.end_request(req.seq,
+                                                     status="cancelled")
                     self._hi.clear()
                     self._lo.clear()
                 self._work.notify_all()
@@ -565,18 +653,12 @@ class QueryCoalescer:
             scalars = dict(
                 queue_depth=self._depth_locked(),
                 in_flight=self._in_flight,
-                submitted=self._submitted,
-                completed=self._completed,
-                rejected=self._rejected,
-                failed=self._failed,
-                cancelled=self._cancelled,
-                deadline_misses=self._deadline_misses,
-                quarantined=self._quarantined,
-                degraded=self._degraded,
-                write_dispatches=self._write_dispatches,
-                docs_added=self._docs_added,
-                docs_removed=self._docs_removed)
-            counts = dict(self._dispatch_counts)
+                **{f: int(self._c[f].value) for f in (
+                    "submitted", "completed", "rejected", "failed",
+                    "cancelled", "deadline_misses", "quarantined",
+                    "degraded", "write_dispatches", "docs_added",
+                    "docs_removed")})
+            counts = {t: int(c.value) for t, c in self._c_disp.items()}
             hist = dict(sorted(self._batch_hist.items()))
             lat_snap = list(self._latencies)
             hit_rate = (self._hit_rate_sum / self._hit_rate_n
@@ -672,6 +754,7 @@ class QueryCoalescer:
         dispatcher's fan-out can never hit InvalidStateError)."""
         batch: list[_Request] = []
         kind: object = None
+        now = time.monotonic()
         while self._depth_locked() and len(batch) < self.max_batch:
             lane = self._hi or self._lo
             head = lane[0]
@@ -683,9 +766,14 @@ class QueryCoalescer:
             if rq.future.set_running_or_notify_cancel():
                 kind = (rq.op, rq.k)
                 batch.append(rq)
+                if self._tracer.enabled:    # queue wait ends at the cut
+                    self._tracer.add_span(rq.seq, "queue", rq.t_submit, now)
             else:
-                self._cancelled += 1
+                self._c["cancelled"].inc()
+                self._tracer.end_request(rq.seq, t1=now, status="cancelled")
         self._in_flight = len(batch)
+        self._g_queue.set(self._depth_locked())
+        self._g_inflight.set(len(batch))
         self._space.notify_all()
         return batch
 
@@ -797,33 +885,85 @@ class QueryCoalescer:
             self._service_est_kind[op] = (
                 t_done - t0 if prev is None
                 else 0.7 * prev + 0.3 * (t_done - t0))
-            self._dispatch_counts[cause] += 1
+            self._c_disp[cause].inc()
             self._batch_hist[len(batch)] += 1
+            self._h_batch.observe(len(batch))
+            self._g_est.set(self._service_est_s)
             self.batch_log.append(tuple(rq.seq for rq in batch))
+            prune = {}
             if is_write:
-                self._write_dispatches += 1
+                self._c["write_dispatches"].inc()
                 if err is None:
-                    self._docs_added += n_added
-                    self._docs_removed += n_removed
+                    self._c["docs_added"].inc(n_added)
+                    self._c["docs_removed"].inc(n_removed)
             else:
                 # program-shape telemetry is query-only: a write dispatch
                 # compiles nothing, so it must not trip the warmup
                 # shape-coverage cross-check
                 self.shape_log.append((op, len(batch), batch[0].k))
+                if err is None:
+                    if op == "top_k":
+                        prune = getattr(self.svc, "last_prune_stats",
+                                        None) or {}
+                    for key, ph in (("precompute_s", "precompute"),
+                                    ("solve_s", "solve")):
+                        if key in info:
+                            self._c_phase[ph].inc(float(info[key]))
+                    for key, ph in (("bound_s", "bound"),
+                                    ("rerank_s", "rerank")):
+                        if key in prune:
+                            self._c_phase[ph].inc(float(prune[key]))
+            missed_by_seq: dict[int, bool] = {}
             for rq in batch:
                 if err is None:
-                    self._completed += 1
+                    self._c["completed"].inc()
                     if degraded is not None:
-                        self._degraded += 1
+                        self._c["degraded"].inc()
                     self._latencies.append(t_done - rq.t_submit)
+                    self._h_latency.observe(t_done - rq.t_submit)
                     missed = (rq.deadline is not None
                               and t_done > rq.deadline)
+                    missed_by_seq[rq.seq] = missed
                     if missed:
-                        self._deadline_misses += 1
+                        self._c["deadline_misses"].inc()
                     self._miss_ewma = (0.9 * self._miss_ewma
                                        + 0.1 * float(missed))
                 else:
-                    self._failed += 1
+                    self._c["failed"].inc()
+        if self._tracer.enabled:
+            rung = None
+            if self._guard is not None and self._guard.dispatch_log:
+                rung = self._guard.dispatch_log[-1][1]
+            pre_s = float(info.get("precompute_s", 0.0)) \
+                if err is None and not is_write else 0.0
+            solve_s = float(info.get("solve_s", 0.0)) \
+                if err is None and not is_write else 0.0
+            status = ("failed" if err is not None
+                      else "degraded" if degraded is not None else "ok")
+            for rq in batch:
+                self._tracer.add_span(
+                    rq.seq, "dispatch", t0, t_done, op=op, cause=cause,
+                    batch=len(batch), rung=rung,
+                    hit_rate=info.get("hit_rate"),
+                    tier=(degraded.tier if degraded is not None else None))
+                if pre_s:
+                    self._tracer.add_span(
+                        rq.seq, "precompute", t0, t0 + pre_s,
+                        hits=info.get("hits"), misses=info.get("misses"))
+                if solve_s:
+                    self._tracer.add_span(
+                        rq.seq, "solve", t0 + pre_s, t0 + pre_s + solve_s,
+                        n_iter=getattr(getattr(self.svc, "cfg", None),
+                                       "max_iter", None),
+                        bound_s=prune.get("bound_s"),
+                        rerank_s=prune.get("rerank_s"),
+                        solves_avoided=prune.get("solves_avoided"))
+                self._tracer.end_request(
+                    rq.seq, t1=t_done, status=status,
+                    deadline_missed=missed_by_seq.get(rq.seq, False),
+                    reason=(degraded.reason if degraded is not None
+                            else type(err).__name__ if err is not None
+                            else None))
         if self._heartbeat is not None:
             try:
                 self._heartbeat(kind_str, t_done - t0, err is None)
@@ -841,4 +981,5 @@ class QueryCoalescer:
                 rq.future.set_exception(err)
         with self._lock:
             self._in_flight = 0
+            self._g_inflight.set(0)
             self._idle.notify_all()

@@ -65,6 +65,7 @@ from typing import Callable, Sequence
 import numpy as np
 
 from repro.core import guards as _guards
+from repro.obs.trace import NULL_TRACER
 
 # the full contraction-path ladder, fastest-and-twitchiest first; a
 # service's ladder starts at its own impl and demotes rightward
@@ -120,11 +121,13 @@ class CircuitBreaker:
     own lock. ``clock`` is injectable for deterministic tests."""
 
     def __init__(self, *, failures: int = 3, cooldown_s: float = 5.0,
-                 probes: int = 1, clock: Callable[[], float] = time.monotonic):
+                 probes: int = 1, clock: Callable[[], float] = time.monotonic,
+                 on_transition: Callable[[str, str], None] | None = None):
         self.failures = max(1, failures)
         self.cooldown_s = cooldown_s
         self.probes = max(1, probes)
         self._clock = clock
+        self._on_transition = on_transition
         self.state = "closed"
         self.transitions: list[tuple[str, str]] = []
         self._streak = 0
@@ -134,7 +137,9 @@ class CircuitBreaker:
     def _to(self, state: str) -> None:
         if state != self.state:
             self.transitions.append((self.state, state))
-            self.state = state
+            old, self.state = self.state, state
+            if self._on_transition is not None:
+                self._on_transition(old, state)
 
     def allow(self) -> bool:
         """May a dispatch use this rung right now? An open breaker past
@@ -243,11 +248,44 @@ class EngineGuard:
 
     def __init__(self, svc, policy: ResiliencePolicy | None = None, *,
                  clock: Callable[[], float] = time.monotonic,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 tracer=None, metrics=None):
         self.svc = svc
         self.policy = policy or ResiliencePolicy()
         self._clock = clock
         self._sleep = sleep
+        # late-bound on purpose: the coalescer attaches its tracer to a
+        # prebuilt guard after construction; breaker callbacks read the
+        # attribute at fire time, so attachment is retroactive
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self._mx = None
+        if metrics is not None:
+            self._mx = {
+                "dispatches": metrics.counter(
+                    "wmd_guard_dispatches_total",
+                    "batches routed through the resilience guard"),
+                "retries": metrics.counter(
+                    "wmd_guard_retries_total", "per-rung retry attempts"),
+                "failures": metrics.counter(
+                    "wmd_guard_failures_total",
+                    "failed dispatch attempts (incl. retried)"),
+                "demoted": metrics.counter(
+                    "wmd_guard_demoted_total",
+                    "dispatches served below rung 0"),
+                "degraded": metrics.counter(
+                    "wmd_guard_degraded_total",
+                    "dispatches answered by the RWMD bound tier"),
+                "transitions": metrics.counter(
+                    "wmd_breaker_transitions_total",
+                    "circuit-breaker state transitions"),
+                "brownout_entries": metrics.counter(
+                    "wmd_brownout_entries_total", "brownout activations"),
+                "brownout_active": metrics.gauge(
+                    "wmd_brownout_active", "1 while browned out"),
+                "breaker_open": metrics.gauge(
+                    "wmd_breaker_open_rungs",
+                    "rungs currently open or half_open"),
+            }
         self._rng = np.random.default_rng(self.policy.seed)
         self._lock = threading.Lock()
         ladder = tuple(self.policy.impl_ladder) or _default_ladder(
@@ -262,11 +300,15 @@ class EngineGuard:
             "top_k": [("pruned", impl) for impl in ladder]
                      + [("scan", None)],
         }
-        mk = lambda: CircuitBreaker(                      # noqa: E731
-            failures=self.policy.breaker_failures,
-            cooldown_s=self.policy.breaker_cooldown_s,
-            probes=self.policy.breaker_probes, clock=clock)
-        self._breakers = {(kind, i): mk()
+        def mk(kind: str, i: int) -> CircuitBreaker:
+            return CircuitBreaker(
+                failures=self.policy.breaker_failures,
+                cooldown_s=self.policy.breaker_cooldown_s,
+                probes=self.policy.breaker_probes, clock=clock,
+                on_transition=lambda old, new, kind=kind, i=i:
+                    self._on_breaker(kind, i, old, new))
+
+        self._breakers = {(kind, i): mk(kind, i)
                           for kind, rungs in self._rungs.items()
                           for i in range(len(rungs))}
         self.brownout = BrownoutController(
@@ -288,6 +330,36 @@ class EngineGuard:
         # can't grow it without bound
         self.dispatch_log: collections.deque[tuple[str, int, bool]] = \
             collections.deque(maxlen=4096)
+
+    # -- observability taps ----------------------------------------------
+    # (event emission only appends to the tracer's own deque under the
+    # tracer's lock -- no callbacks back into guard state, so firing them
+    # while holding self._lock cannot deadlock)
+
+    def _on_breaker(self, kind: str, rung: int, old: str, new: str) -> None:
+        self.tracer.event("breaker.transition", kind=kind, rung=rung,
+                          frm=old, to=new)
+        if self._mx is not None:
+            self._mx["transitions"].inc()
+            self._mx["breaker_open"].set(
+                sum(1 for br in self._breakers.values()
+                    if br.state != "closed"))
+
+    def _update_brownout(self, queue_depth: int, miss_ewma: float) -> bool:
+        """brownout.update + enter/exit edge detection (caller holds
+        self._lock)."""
+        was = self.brownout.active
+        active = self.brownout.update(queue_depth, miss_ewma)
+        if active != was:
+            self.tracer.event("brownout.enter" if active else "brownout.exit",
+                              queue_depth=queue_depth,
+                              miss_ewma=round(float(miss_ewma), 6),
+                              entries=self.brownout.entries)
+            if self._mx is not None:
+                self._mx["brownout_active"].set(1.0 if active else 0.0)
+                if active:
+                    self._mx["brownout_entries"].inc()
+        return active
 
     # -- dispatch ---------------------------------------------------------
 
@@ -330,6 +402,10 @@ class EngineGuard:
         with self._lock:
             self._degraded += 1
             self._degraded_requests += len(payloads)
+        self.tracer.event("degraded", kind=kind, reason=reason,
+                          requests=len(payloads))
+        if self._mx is not None:
+            self._mx["degraded"].inc()
         return DegradedResult(value=val, reason=reason)
 
     def dispatch(self, kind: str, payloads: Sequence[np.ndarray],
@@ -343,7 +419,9 @@ class EngineGuard:
             raise ValueError(f"unknown dispatch kind {kind!r}")
         with self._lock:
             self._dispatches += 1
-            browned = self.brownout.update(queue_depth, miss_ewma)
+            browned = self._update_brownout(queue_depth, miss_ewma)
+        if self._mx is not None:
+            self._mx["dispatches"].inc()
         if browned:
             try:
                 res = self._degrade(kind, payloads, k, "brownout")
@@ -376,6 +454,12 @@ class EngineGuard:
                                  and br.allow())
                         if retry:
                             self._retries += 1
+                    self.tracer.event("dispatch.failure", kind=kind, rung=i,
+                                      error=type(e).__name__, retry=retry)
+                    if self._mx is not None:
+                        self._mx["failures"].inc()
+                        if retry:
+                            self._mx["retries"].inc()
                     if not retry:
                         break             # rung exhausted: demote
                     attempt += 1
@@ -386,6 +470,8 @@ class EngineGuard:
                     if i > 0:
                         self._demoted += 1
                     self.dispatch_log.append((kind, i, False))
+                if i > 0 and self._mx is not None:
+                    self._mx["demoted"].inc()
                 return res
         if self.policy.degrade_on_failure:
             try:
@@ -410,7 +496,7 @@ class EngineGuard:
         """Feed overload signals outside a dispatch (e.g. a monitoring
         loop); returns whether brownout is active."""
         with self._lock:
-            return self.brownout.update(queue_depth, miss_ewma)
+            return self._update_brownout(queue_depth, miss_ewma)
 
     def trip(self, kind: str = "plain", reason: str = "") -> None:
         """Force-open the first non-open rung of ``kind`` (watchdog hook:
@@ -420,6 +506,8 @@ class EngineGuard:
                 br = self._breakers[(kind, i)]
                 if br.state != "open":
                     br.force_open()
+                    self.tracer.event("breaker.tripped", kind=kind, rung=i,
+                                      reason=reason or "external trip")
                     return
 
     def stats(self) -> ResilienceStats:

@@ -191,6 +191,7 @@ class WMDService:
     bound_docs_chunk: int | None = 256
     guards: bool = True
     live: object | None = None          # data.live_corpus.LiveCorpus
+    metrics: object | None = None       # repro.obs.MetricsRegistry
 
     @classmethod
     def from_live(cls, mesh, cfg, vecs, live, **kw) -> "WMDService":
@@ -220,10 +221,17 @@ class WMDService:
         self._vecs_d, self._cols_d, self._vals_d = shard_wmd_inputs(
             self.mesh, self.vecs, self._rb.cols, self._rb.vals,
             doc_axes=self._doc_axes)
+        if self.metrics is None:
+            # every service owns a registry: it is the single backing
+            # store scrape/export read, and async_service shares it with
+            # the coalescer so the whole stack lands in one namespace
+            from repro.obs.metrics import MetricsRegistry
+            self.metrics = MetricsRegistry()
         self._kcache = KCache(self.cache_capacity, self._vecs_d,
                               self.cfg.lamb, mesh=self.mesh,
                               rows_bucket=self.cache_rows_bucket,
-                              kexp_impl=self.kexp_impl)
+                              kexp_impl=self.kexp_impl,
+                              metrics=self.metrics)
         # prefilter state: the bound runs replicated on the ORIGINAL
         # (un-rebucketed) ELL -- the min over a doc's words needs the doc's
         # whole support, which vocab re-bucketing splits across shards
@@ -615,8 +623,15 @@ class WMDService:
             # the row store). A service-level docs_chunk does NOT bypass --
             # chunking is result-identical and the sequential route is the
             # faster singleton plan either way.
-            self.last_batch_stats = {}     # no stripes phases for this call
-            return self.query_batch_sequential(rs)
+            # no stripes phase split for this route, but the call must not
+            # vanish from attribution: report total solve wall time with an
+            # explicit phases_separable=False marker
+            t0 = time.perf_counter()
+            out = self.query_batch_sequential(rs)
+            self.last_batch_stats = {
+                "solve_s": time.perf_counter() - t0,
+                "phases_separable": False, "route": "sequential"}
+            return out
         sel_b, r_b, mask_b = self._padded_query_batch(rs)
         q = len(rs)
         dc = self.docs_chunk if docs_chunk is _UNSET else (docs_chunk or None)
@@ -628,11 +643,17 @@ class WMDService:
             # route a cache-less service through the stripes engine anyway
             # (e.g. for the bench's phase split).
             fn = self._batch_fn(impl or self.impl, dc)
-            self.last_batch_stats = {}     # phases not separable in-program
+            # precompute is fused into the solve program here, so the
+            # phases are not separable -- still report the total wall time
+            # instead of silently dropping the call from attribution
+            t0 = time.perf_counter()
             wmd = fn(jnp.asarray(self.vecs[sel_b]), jnp.asarray(r_b),
                      jnp.asarray(mask_b), self._vecs_d, self._cols_d,
                      self._vals_d)
             wmd = np.asarray(wmd)[:q]
+            self.last_batch_stats = {
+                "solve_s": time.perf_counter() - t0,
+                "phases_separable": False, "route": "legacy_fused"}
             self._check_result(wmd, what="query_batch distances")
             return wmd
         fn = self._stripe_fn(impl or self.impl, dc)
