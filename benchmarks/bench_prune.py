@@ -1,14 +1,16 @@
-"""Two-tier pruned retrieval: RWMD-prefiltered top-k vs the exact full scan.
+"""Cascade-pruned retrieval: tiered-bound top-k vs the exact full scan.
 
     PYTHONPATH=src python benchmarks/bench_prune.py [--tiny] \
-        [--docs 1024] [--k 16] [--out BENCH_prune.json]
+        [--docs 4096] [--k 16] [--n-sweep 1024,2048,4096] \
+        [--out BENCH_prune.json]
 
 Per batch of Zipf queries three routes run on the same inputs:
-  * ``pruned``    -- `WMDService.top_k_batch(prune=True)`: doc-side RWMD
-                     lower bounds over all N docs (one batched min-SDDMM,
-                     word-id dedup across the batch), then the exact
-                     Sinkhorn rerank only on the candidate prefix, in
-                     fixed prune_chunk doc blocks in ascending-bound order.
+  * ``pruned``    -- `WMDService.top_k_batch(prune=True)`: the retrieval
+                     cascade (tier-0 centroid screen -> LC-RWMD ->
+                     doc-side RWMD; see core.cascade / docs), then the
+                     exact Sinkhorn rerank only on the candidate prefix,
+                     in fixed prune_chunk doc blocks in ascending-bound
+                     order.
   * ``scan``      -- `top_k_scan_batch`: the SAME chunked rerank programs
                      over every doc (bound order, no pruning) -- the
                      bitwise oracle. Pruned must equal it exactly
@@ -18,17 +20,22 @@ Per batch of Zipf queries three routes run on the same inputs:
                      baseline a deployed retriever would otherwise run.
 
 Headline fields: ``solves_avoided`` (fraction of the Q x N exact Sinkhorn
-solves the prefilter eliminated -- the paper-style work metric, machine
+solves the cascade eliminated -- the paper-style work metric, machine
 independent) and ``speedup_vs_full`` / ``speedup_vs_scan`` (end-to-end
-wall-clock, interleaved-round medians). ``--tiny`` is the CI smoke shape
-and *gates*: solves_avoided must be >= 0.5 (exit 1 otherwise), per the
-two-tier engine's acceptance bar; the bitwise gate runs at every scale.
+wall-clock, interleaved-round medians). Each point also carries the
+per-tier funnel (``tiers``: survivors and solves-avoided per tier, alone
+and cumulative) so a regression can be blamed on the tier that widened.
+``--tiny`` is the CI smoke shape and *gates*: solves_avoided must be
+>= 0.85 (exit 1 otherwise), per the cascade's acceptance bar; the bitwise
+gate runs at every scale. ``--n-sweep`` re-runs the whole bench at
+several corpus sizes to expose how avoidance scales with N (the per-query
+ceiling is 1 - chunk/N: one chunk must always be solved). At the headline
+defaults (N=4096, chunk=32, ceiling 0.992) the cascade lands ~0.96.
 
-The corpus matters: solves-avoided is a pure geometry property (how well
-per-doc-word min costs separate docs), so the artifact records the corpus
-shape alongside the numbers. Longer docs separate better (more far-word
-mass), which is why the defaults keep the generator's paper-ish
-mean_words=35.
+The corpus matters: solves-avoided is a geometry property (how well the
+tier bounds separate docs), so the artifact records the corpus shape
+alongside the numbers. Longer docs separate better (more far-word mass),
+which is why the defaults keep the generator's paper-ish mean_words=35.
 
 Self-contained on purpose (no benchmarks.common import): CI invokes it as
 a script with only the installed `repro` package on the path.
@@ -55,10 +62,11 @@ def bench_interleaved(calls: dict, *, warmup: int = 1, rounds: int = 3):
     return {name: sorted(ts)[len(ts) // 2] for name, ts in times.items()}
 
 
-def run(*, vocab: int = 2048, docs: int = 1024, q: int = 8, k: int = 16,
+def run(*, vocab: int = 2048, docs: int = 4096, q: int = 8, k: int = 16,
         query_words: int = 13, v_r: int = 16, mean_words: float = 35.0,
         zipf_s: float = 1.3, cache_capacity: int = 2048,
-        prune_chunk: int = 64, batches: int = 3, rounds: int = 3,
+        mcache_capacity: int = 2048, prune_chunk: int = 32,
+        batches: int = 3, rounds: int = 3,
         gate_avoided: float | None = None, out: str | None = None) -> dict:
     import numpy as np
     from repro.configs.sinkhorn_wmd import WMDConfig
@@ -75,21 +83,25 @@ def run(*, vocab: int = 2048, docs: int = 1024, q: int = 8, k: int = 16,
                        seed=0)
     mesh = make_mesh((1, 1), ("data", "model"))
     svc = WMDService(mesh=mesh, cfg=cfg, vecs=data.vecs, ell=data.ell,
-                     cache_capacity=cache_capacity, prune_chunk=prune_chunk)
+                     cache_capacity=cache_capacity,
+                     mcache_capacity=mcache_capacity,
+                     prune_chunk=prune_chunk)
     stream = zipf_query_stream(vocab_size=vocab, query_words=query_words,
                                s=zipf_s, seed=1)
     results = {"vocab": vocab, "docs": docs, "Q": q, "k": k, "v_r": v_r,
                "query_words": query_words, "mean_words": mean_words,
                "nnz_max": data.ell.nnz_max, "zipf_s": zipf_s,
                "max_iter": cfg.max_iter, "prune_chunk": prune_chunk,
-               "cache_capacity": cache_capacity, "points": [],
+               "cache_capacity": cache_capacity,
+               "mcache_capacity": mcache_capacity, "points": [],
                "note": ("per batch: pruned top-k asserted bitwise equal to "
                         "the exhaustive chunked scan (the exactness "
                         "contract) and set-equal to the one-program full "
                         "scan; solves_avoided is the fraction of Q x N "
-                        "exact Sinkhorn solves the RWMD prefilter "
-                        "eliminated. Timing: interleaved-round medians on "
-                        "the last batch's queries.")}
+                        "exact Sinkhorn solves the cascade eliminated "
+                        "(per-query ceiling 1 - chunk/N); tiers is the "
+                        "per-tier funnel. Timing: interleaved-round "
+                        "medians on the last batch's queries.")}
     last_qs = None
     for b in range(batches):
         qs = [next(stream) for _ in range(q)]
@@ -109,14 +121,21 @@ def run(*, vocab: int = 2048, docs: int = 1024, q: int = 8, k: int = 16,
                  "rerank_programs": ps["rerank_programs"],
                  "bound_s": ps["bound_s"], "rerank_s": ps["rerank_s"],
                  "hit_rate": hit_rate,
+                 "tiers": ps.get("tiers", []),
                  "bitwise_vs_scan": bitwise,
                  "idx_match_vs_full": full_match,
                  "max_abs_err_vs_full": float(np.abs(d_p - d_f).max())}
         results["points"].append(point)
+        results.setdefault("avoided_ceiling",
+                           1.0 - ps["chunk"] / max(ps["docs"], 1))
+        funnel = ":".join(
+            f"{t['tier']}={t['cascade_solves_avoided']:.2f}"
+            for t in point["tiers"])
         print(f"prune/b{b},{ps['rerank_s'] * 1e6:.1f},"
               f"avoided={ps['solves_avoided']:.2f}:"
               f"solves={ps['exact_solves']}/{ps['scan_solves']}:"
-              f"bitwise={bitwise}:hit_rate={point['hit_rate']:.2f}")
+              f"bitwise={bitwise}:hit_rate={point['hit_rate']:.2f}:"
+              f"{funnel}")
     med = bench_interleaved(
         {"pruned": lambda: svc.top_k_batch(last_qs, k, prune=True),
          "scan": lambda: svc.top_k_scan_batch(last_qs, k),
@@ -132,6 +151,8 @@ def run(*, vocab: int = 2048, docs: int = 1024, q: int = 8, k: int = 16,
     results["speedup_vs_scan"] = med["scan"] / med["pruned"]
     results["bitwise_ok"] = all(p["bitwise_vs_scan"]
                                 for p in results["points"])
+    results["tiers"] = results["points"][-1]["tiers"] \
+        if results["points"] else []
     print(f"prune/headline,{med['pruned'] * 1e6:.1f},"
           f"avoided={avoided:.2f}:"
           f"speedup_vs_full={results['speedup_vs_full']:.2f}x:"
@@ -147,10 +168,33 @@ def run(*, vocab: int = 2048, docs: int = 1024, q: int = 8, k: int = 16,
     return results
 
 
+def run_sweep(n_list: list[int], out: str | None = None, **kw) -> dict:
+    """Re-run the whole bench at each corpus size; the sweep artifact is
+    the avoidance-vs-N curve (each point's ceiling is 1 - chunk/N)."""
+    sweep = {"n_sweep": [], "points": []}
+    for n in n_list:
+        r = run(docs=n, out=None, **kw)
+        sweep["n_sweep"].append(n)
+        sweep["points"].append(
+            {"docs": n, "solves_avoided": r["solves_avoided"],
+             "avoided_ceiling": r.get("avoided_ceiling"),
+             "speedup_vs_full": r["speedup_vs_full"],
+             "speedup_vs_scan": r["speedup_vs_scan"],
+             "tiers": r["tiers"]})
+        print(f"prune/sweep-n{n},avoided={r['solves_avoided']:.3f}"
+              f"(ceiling {r.get('avoided_ceiling', 0):.3f}):"
+              f"speedup_vs_full={r['speedup_vs_full']:.2f}x")
+    if out:
+        with open(out, "w") as f:
+            json.dump(sweep, f, indent=2)
+        print(f"# wrote {out}")
+    return sweep
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--vocab", type=int, default=2048)
-    ap.add_argument("--docs", type=int, default=1024)
+    ap.add_argument("--docs", type=int, default=4096)
     ap.add_argument("--q", type=int, default=8)
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--query-words", type=int, default=13)
@@ -158,22 +202,39 @@ def main():
     ap.add_argument("--mean-words", type=float, default=35.0)
     ap.add_argument("--zipf-s", type=float, default=1.3)
     ap.add_argument("--cache-capacity", type=int, default=2048)
-    ap.add_argument("--prune-chunk", type=int, default=64)
+    ap.add_argument("--mcache-capacity", type=int, default=2048)
+    ap.add_argument("--prune-chunk", type=int, default=32)
     ap.add_argument("--batches", type=int, default=3)
     ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--n-sweep", default="",
+                    help="comma-separated corpus sizes; re-runs the bench "
+                         "at each and writes the avoidance-vs-N curve "
+                         "instead of a single-point artifact")
     ap.add_argument("--tiny", action="store_true",
-                    help="CI smoke shape; also gates solves_avoided >= 0.5")
+                    help="CI smoke shape; also gates solves_avoided >= "
+                         "0.85")
     ap.add_argument("--out", default="BENCH_prune.json")
     args = ap.parse_args()
     if args.tiny:
         run(vocab=512, docs=256, q=4, k=8, query_words=13,
-            mean_words=35.0, cache_capacity=512, prune_chunk=32,
-            batches=2, rounds=2, gate_avoided=0.5, out=args.out)
+            mean_words=35.0, cache_capacity=512, mcache_capacity=512,
+            prune_chunk=16, batches=2, rounds=2, gate_avoided=0.85,
+            out=args.out)
+    elif args.n_sweep:
+        run_sweep([int(n) for n in args.n_sweep.split(",")],
+                  vocab=args.vocab, q=args.q, k=args.k,
+                  query_words=args.query_words, v_r=args.v_r,
+                  mean_words=args.mean_words, zipf_s=args.zipf_s,
+                  cache_capacity=args.cache_capacity,
+                  mcache_capacity=args.mcache_capacity,
+                  prune_chunk=args.prune_chunk, batches=args.batches,
+                  rounds=args.rounds, out=args.out)
     else:
         run(vocab=args.vocab, docs=args.docs, q=args.q, k=args.k,
             query_words=args.query_words, v_r=args.v_r,
             mean_words=args.mean_words, zipf_s=args.zipf_s,
             cache_capacity=args.cache_capacity,
+            mcache_capacity=args.mcache_capacity,
             prune_chunk=args.prune_chunk, batches=args.batches,
             rounds=args.rounds, out=args.out)
 

@@ -22,9 +22,16 @@ to ``$GITHUB_STEP_SUMMARY`` in CI) and in ``BENCH_trajectory.json`` -- the
 machine-readable run-over-run record (prev value, current value, delta,
 verdict per field) that accumulates as a per-run artifact.
 
-Missing data never gates spuriously: a field or file absent on either
-side (first run after a rename, a bench that did not run) reports
-``n/a`` and passes -- only a *measured* regression fails the job.
+Missing data never gates spuriously -- but it is never conflated either.
+A field measured now with no previous value (first run, or first run
+after a rename) reports ``seeded``: it passes, and its current value
+lands in the trajectory so the NEXT run has a baseline. A field absent
+from the *current* run reports ``n/a``. And the baseline directory's own
+state is classified (``baseline_status``): "missing-dir" (true first
+run: nothing was ever downloaded), "no-artifacts" (a download landed but
+held no readable BENCH_*.json -- an upstream failure worth eyeballing,
+still not a regression), or "present". Only a *measured* regression
+fails the job.
 
 ``--self-test`` proves the gate can actually fail: it synthesizes a
 baseline, checks that an identical run passes and that a 30% slowdown on
@@ -92,9 +99,26 @@ def load_artifacts(root: str) -> dict[str, dict]:
     return out
 
 
+def baseline_status(root: str | None,
+                    artifacts: dict | None = None) -> str:
+    """Classify the baseline side: "missing-dir" (nothing was ever
+    downloaded -- the true first run), "no-artifacts" (a directory exists
+    but holds no readable BENCH_*.json), or "present"."""
+    if not root or not os.path.isdir(root):
+        return "missing-dir"
+    if artifacts is None:
+        artifacts = load_artifacts(root)
+    return "present" if artifacts else "no-artifacts"
+
+
 def compare(prev: dict[str, dict], cur: dict[str, dict],
-            threshold: float) -> dict:
-    """Evaluate every declared field; returns the trajectory record."""
+            threshold: float, *, baseline: str = "present") -> dict:
+    """Evaluate every declared field; returns the trajectory record.
+
+    Statuses: ``ok`` / ``regression`` (both sides measured), ``seeded``
+    (measured now, no previous value -- the current value becomes the
+    next run's baseline via the trajectory/artifacts), ``n/a`` (not
+    measured in the current run). Only ``regression`` fails."""
     rows = []
     for fname, path, direction in FIELDS:
         p = get_path(prev.get(fname), path)
@@ -106,9 +130,13 @@ def compare(prev: dict[str, dict], cur: dict[str, dict],
             row["delta_frac"] = delta
             worse = -delta if direction == "higher" else delta
             row["status"] = "regression" if worse > threshold else "ok"
+        elif c is not None and p is None:
+            row["status"] = "seeded"
         rows.append(row)
     regressions = [r for r in rows if r["status"] == "regression"]
     return {"threshold": threshold, "fields": rows,
+            "baseline_status": baseline,
+            "seeded": sum(r["status"] == "seeded" for r in rows),
             "regressions": len(regressions),
             "pass": not regressions}
 
@@ -124,7 +152,7 @@ def markdown_table(record: dict) -> str:
         fmt = lambda v: "n/a" if v is None else f"{v:.3f}"  # noqa: E731
         delta = ("n/a" if r["delta_frac"] is None
                  else f"{r['delta_frac']:+.1%}")
-        mark = {"ok": "ok", "n/a": "n/a",
+        mark = {"ok": "ok", "n/a": "n/a", "seeded": "seeded (first run)",
                 "regression": "**REGRESSION**"}[r["status"]]
         lines.append(f"| {r['file']}:{r['field']} | {fmt(r['prev'])} | "
                      f"{fmt(r['cur'])} | {delta} | {mark} |")
@@ -132,8 +160,13 @@ def markdown_table(record: dict) -> str:
 
 
 def self_test(threshold: float) -> int:
-    """Prove the gate trips on a synthetic 30% slowdown and stays quiet on
-    an identical run. Exit 0 iff both hold."""
+    """Prove the gate trips on a synthetic 30% slowdown, stays quiet on an
+    identical run, and seeds (rather than silently blanks) a first run
+    with no baseline. Exit 0 iff all hold."""
+    if not FIELDS:
+        print("self-test: FIELDS is empty -- nothing is gated",
+              file=sys.stderr)
+        return 1
     base: dict[str, dict] = {}
     for fname, path, _ in FIELDS:
         obj = base.setdefault(fname, {})
@@ -155,17 +188,36 @@ def self_test(threshold: float) -> int:
         factor = 0.7 if direction == "higher" else 1.3  # 30% worse
         obj[segs[-1]] = obj[segs[-1]] * factor
 
+    # every declared path must resolve in its own synthesized artifact --
+    # a path typo would otherwise read as an eternally-passing "n/a"
+    bad = [(f, p) for f, p, _ in FIELDS
+           if get_path(base.get(f), p) != 2.0]
+    if bad:
+        print(f"self-test: unresolvable field paths: {bad}",
+              file=sys.stderr)
+        return 1
+
     ident = compare(base, base, threshold)
     regress = compare(base, slow, threshold)
+    seeded = compare({}, base, threshold,
+                     baseline=baseline_status(None))
     ok_ident = ident["pass"] and all(r["status"] == "ok"
                                      for r in ident["fields"])
     ok_regress = (not regress["pass"]
                   and all(r["status"] == "regression"
                           for r in regress["fields"]))
+    # a first run must pass AND record every current value (seeded), not
+    # produce an empty all-n/a trajectory
+    ok_seeded = (seeded["pass"] and seeded["seeded"] == len(FIELDS)
+                 and seeded["baseline_status"] == "missing-dir"
+                 and all(r["status"] == "seeded" and r["cur"] is not None
+                         for r in seeded["fields"]))
     print(f"self-test: identical-run pass={ok_ident}, "
-          f"30%-slowdown fails={ok_regress}")
-    if not (ok_ident and ok_regress):
+          f"30%-slowdown fails={ok_regress}, "
+          f"no-baseline seeds={ok_seeded}")
+    if not (ok_ident and ok_regress and ok_seeded):
         print(markdown_table(regress), file=sys.stderr)
+        print(markdown_table(seeded), file=sys.stderr)
         return 1
     return 0
 
@@ -194,11 +246,15 @@ def main() -> int:
     if not args.prev:
         ap.error("--prev is required (or use --self-test)")
 
-    prev = load_artifacts(args.prev)
+    prev = load_artifacts(args.prev) if os.path.isdir(args.prev) else {}
     cur = load_artifacts(args.cur)
-    record = compare(prev, cur, args.threshold)
+    status = baseline_status(args.prev, prev)
+    record = compare(prev, cur, args.threshold, baseline=status)
     record["prev_files"] = sorted(prev)
     record["cur_files"] = sorted(cur)
+    if status != "present":
+        print(f"# no usable baseline ({status}): seeding the trajectory "
+              f"with {record['seeded']} current value(s)")
     table = markdown_table(record)
     print(table)
     if args.summary:

@@ -8,8 +8,9 @@ Layers (bottom-up):
   ot              -- generic Sinkhorn OT (shared with the MoE router)
   convergence     -- while-x-changes early-exit solver
   distributed     -- shard_map multi-chip / multi-pod engine
-  kcache          -- cross-query word-id-keyed K/KM row cache
+  kcache          -- cross-query word-id-keyed K/KM + M row caches
   rwmd            -- doc-side RWMD lower bounds (top-k prune prefilter)
+  cascade         -- tier-0 centroid screen + LC-RWMD (cascade front tiers)
   guards          -- typed numeric guards (underflow pre-check, non-finite
                      and silent-zero detection, admission validation)
 """
@@ -24,9 +25,11 @@ from repro.core.sinkhorn import (SinkhornPrecompute, assemble_precompute,
 from repro.core.guards import (GuardError, InvalidQueryError, NumericalError,
                                check_distances, check_finite, check_km_rows,
                                underflow_possible, validate_query)
-from repro.core.kcache import KCache, KCacheStats
+from repro.core.kcache import KCache, KCacheStats, MCache
 from repro.core.rwmd import (assemble_m_stripes, rwmd_bound_batch,
                              rwmd_lower_bound, rwmd_query_side_bound)
+from repro.core.cascade import (centroid_bound_batch, doc_centroids,
+                                lc_rwmd_bound_batch, min_cost_vectors)
 from repro.core.sparse_sinkhorn import (BatchedSinkhornPrecompute,
                                         batched_sinkhorn_loop, pad_k,
                                         precompute_batch, sddmm, spmm,
@@ -52,9 +55,11 @@ __all__ = [
     "GuardError", "InvalidQueryError", "NumericalError",
     "check_distances", "check_finite", "check_km_rows",
     "underflow_possible", "validate_query",
-    "KCache", "KCacheStats",
+    "KCache", "KCacheStats", "MCache",
     "assemble_m_stripes", "rwmd_bound_batch", "rwmd_lower_bound",
     "rwmd_query_side_bound",
+    "centroid_bound_batch", "doc_centroids", "lc_rwmd_bound_batch",
+    "min_cost_vectors",
     "pad_k", "sddmm", "spmm", "sddmm_spmm_type1", "sddmm_spmm_type2",
     "sinkhorn_wmd_sparse",
     "BatchedSinkhornPrecompute", "precompute_batch",

@@ -56,6 +56,20 @@ baseline, so on/off produce identical bits by construction.
 Invalidation: rows are keyed by (word_id, lambda); `ensure_lamb` drops the
 whole store when lambda changes (embedding updates should call
 `invalidate()` explicitly -- the cache holds no vecs version hash).
+
+`MCache` is the same machinery for the retrieval cascade's *M-row* store
+(PR 5 open item): the bound tiers (`core.rwmd`, `core.cascade`) consume
+(Q, v_r, V+1) cost-matrix stripes whose rows are keyed by ``word_id`` alone
+(no lambda -- M is pure geometry), and `core.rwmd.assemble_m_stripes` used
+to rebuild every row per dispatch. The differences from the K store are
+sign conventions, not structure: ONE buffer instead of a K/K.*M pair, no
+vocab sharding (the bound ELL is replicated), and the reserved row that pad
+*query* rows gather is **+inf** instead of zero (a pad row must never win
+the doc-side min; a zero row would collapse it). Misses go through the same
+`core.rwmd._m_row_block` fixed-bucket spelling the transient assembly uses,
+so cache on/off is bitwise identical by the same argument as the K store.
+Both caches share the host-side bookkeeping (`_RowCacheBase`): exact LRU,
+batch-pinned hits, free-list slot allocation, scoped invalidation.
 """
 from __future__ import annotations
 
@@ -72,7 +86,8 @@ from repro.core.sinkhorn import precompute_rows
 
 @dataclasses.dataclass
 class KCacheStats:
-    """Cumulative counters (unique rows, not query-row slots)."""
+    """Cumulative counters (unique rows, not query-row slots). Shared by
+    the K/K.*M store and the M-row store (`MCache`)."""
 
     lookups: int = 0        # stripes_for_batch calls
     hit_rows: int = 0       # unique ids served from resident rows
@@ -130,7 +145,79 @@ def _gather_stripes(k_buf, km_buf, slots):
     return k_buf[:, slots], km_buf[:, slots]
 
 
-class KCache:
+class _RowCacheBase:
+    """Host-side bookkeeping shared by the K/K.*M and M-row stores: exact
+    LRU over a monotone tick with the current batch's rows pinned, free-list
+    slot allocation, full and scoped invalidation, registry mirroring.
+    Subclasses own the device buffers and the row compute; they must set
+    ``capacity``, ``stats`` and ``_m`` before calling `_reset_map`."""
+
+    def _mirror(self, name: str, n: float = 1) -> None:
+        """Mirror a KCacheStats bump into the registry (no-op unattached)."""
+        if self._m is not None:
+            self._m[name].inc(n)
+            self._m["resident"].set(len(self._slot_of))
+
+    def _reset_map(self):
+        self._slot_of: dict[int, int] = {}
+        self._id_of = np.full(self.capacity, -1, np.int64)
+        self._last_used = np.zeros(self.capacity, np.int64)
+        self._free = list(range(self.capacity - 1, -1, -1))  # pop() -> 0,1,..
+        self._tick = 0
+
+    @property
+    def resident(self) -> int:
+        return len(self._slot_of)
+
+    def invalidate(self):
+        """Drop every cached row (all ids become misses)."""
+        self._reset_map()
+        self.stats.invalidations += 1
+        self._mirror("invalidations")
+
+    def invalidate_ids(self, word_ids) -> int:
+        """Drop exactly the rows for ``word_ids``; returns how many were
+        resident. The scoped invalidation for *embedding* updates: a row is
+        a pure function of (word_id, vecs) (plus lambda for the K store), so
+        changing the vectors of some words poisons only those words' rows.
+        Corpus mutations, by contrast, need NO invalidation at all -- rows
+        never depend on which documents exist (see
+        `serving.wmd_service.WMDService.add_docs`)."""
+        dropped = 0
+        for wid in word_ids:
+            s = self._slot_of.pop(int(wid), None)
+            if s is None:
+                continue
+            self._id_of[s] = -1
+            self._last_used[s] = 0
+            self._free.append(s)
+            dropped += 1
+        if dropped:
+            self.stats.invalidations += 1
+            self._mirror("invalidations")
+        return dropped
+
+    def _alloc_slots(self, n: int) -> list[int]:
+        """Free slots first, then exact-LRU eviction among rows not touched
+        this tick (the current batch's hits are pinned by construction)."""
+        slots = []
+        while self._free and len(slots) < n:
+            slots.append(self._free.pop())
+        need = n - len(slots)
+        if need:
+            evictable = (self._id_of >= 0) & (self._last_used < self._tick)
+            cand = np.nonzero(evictable)[0]
+            order = cand[np.argsort(self._last_used[cand], kind="stable")]
+            for s in order[:need]:
+                del self._slot_of[int(self._id_of[s])]
+                self._id_of[s] = -1
+            self.stats.evictions += need
+            self._mirror("evictions", need)
+            slots.extend(int(s) for s in order[:need])
+        return slots
+
+
+class KCache(_RowCacheBase):
     """Device-resident (word_id, lambda)-keyed K / K.*M row cache.
 
     Args:
@@ -208,12 +295,6 @@ class KCache:
             }
         self._reset_map()
 
-    def _mirror(self, name: str, n: float = 1) -> None:
-        """Mirror a KCacheStats bump into the registry (no-op unattached)."""
-        if self._m is not None:
-            self._m[name].inc(n)
-            self._m["resident"].set(len(self._slot_of))
-
     def _alloc_buffers(self):
         """Fresh all-zero row buffers (+1 row: the reserved zero row pad
         query rows gather). Also the recovery path when a failed donated
@@ -226,73 +307,20 @@ class KCache:
             km = jax.device_put(km, self._sharding)
         self._k_buf, self._km_buf = k, km
 
-    # -- host-side bookkeeping ------------------------------------------------
-
-    def _reset_map(self):
-        self._slot_of: dict[int, int] = {}
-        self._id_of = np.full(self.capacity, -1, np.int64)
-        self._last_used = np.zeros(self.capacity, np.int64)
-        self._free = list(range(self.capacity - 1, -1, -1))  # pop() -> 0,1,..
-        self._tick = 0
-
-    @property
-    def resident(self) -> int:
-        return len(self._slot_of)
+    # -- host-side bookkeeping (LRU machinery in `_RowCacheBase`) -------------
 
     def invalidate(self, lamb: float | None = None):
         """Drop every cached row (all ids become misses). Pass ``lamb`` to
         re-key the store under a new regularization strength."""
-        self._reset_map()
         if lamb is not None:
             self.lamb = float(lamb)
-        self.stats.invalidations += 1
-        self._mirror("invalidations")
+        super().invalidate()
 
     def ensure_lamb(self, lamb: float):
         """Invalidate iff ``lamb`` differs from the store's key (rows are
         keyed by (word_id, lambda) -- a changed lambda changes every row)."""
         if float(lamb) != self.lamb:
             self.invalidate(lamb)
-
-    def invalidate_ids(self, word_ids) -> int:
-        """Drop exactly the rows for ``word_ids``; returns how many were
-        resident. The scoped invalidation for *embedding* updates: a row is
-        a pure function of (word_id, lambda, vecs), so changing the vectors
-        of some words poisons only those words' rows. Corpus mutations, by
-        contrast, need NO invalidation at all -- rows never depend on which
-        documents exist (see `serving.wmd_service.WMDService.add_docs`)."""
-        dropped = 0
-        for wid in word_ids:
-            s = self._slot_of.pop(int(wid), None)
-            if s is None:
-                continue
-            self._id_of[s] = -1
-            self._last_used[s] = 0
-            self._free.append(s)
-            dropped += 1
-        if dropped:
-            self.stats.invalidations += 1
-            self._mirror("invalidations")
-        return dropped
-
-    def _alloc_slots(self, n: int) -> list[int]:
-        """Free slots first, then exact-LRU eviction among rows not touched
-        this tick (the current batch's hits are pinned by construction)."""
-        slots = []
-        while self._free and len(slots) < n:
-            slots.append(self._free.pop())
-        need = n - len(slots)
-        if need:
-            evictable = (self._id_of >= 0) & (self._last_used < self._tick)
-            cand = np.nonzero(evictable)[0]
-            order = cand[np.argsort(self._last_used[cand], kind="stable")]
-            for s in order[:need]:
-                del self._slot_of[int(self._id_of[s])]
-                self._id_of[s] = -1
-            self.stats.evictions += need
-            self._mirror("evictions", need)
-            slots.extend(int(s) for s in order[:need])
-        return slots
 
     # -- row compute ----------------------------------------------------------
 
@@ -420,3 +448,160 @@ class KCache:
         return k_s, km_s, {"unique": len(ids), "hits": 0,
                            "misses": len(ids), "hit_rate": 0.0,
                            "cached": False}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_m_rows(m_buf, slots, rows):
+    """Write freshly computed M rows into their slots. Chunk-pad slots carry
+    an out-of-bounds index (capacity + 1) and are dropped; the reserved +inf
+    row at index capacity is never a target."""
+    return m_buf.at[slots].set(rows, mode="drop")
+
+
+class MCache(_RowCacheBase):
+    """Device-resident word-id-keyed M-row cache for the bound tiers.
+
+    The retrieval cascade's M-stripe assembly (`core.rwmd.assemble_m_stripes`)
+    recomputes every unique row per dispatch; on Zipf streams most rows
+    repeat across batches exactly as the K rows do. This store keeps them
+    resident in ONE (capacity + 1, V + 1) buffer -- rows are keyed by
+    ``word_id`` alone (M is pure geometry: no lambda enters), replicated
+    (the bound ELL is replicated, not vocab-sharded), and row index
+    ``capacity`` is a reserved **+inf** row that pad query rows gather (the
+    doc-side min must never be won by a pad row -- the opposite sign of the
+    K store's reserved zero row). Misses go through the same
+    `core.rwmd._m_row_block` fixed ``rows_bucket`` spelling as the transient
+    assembly, so a row's bits never depend on its chunk-mates and cache
+    on/off stripes are bitwise identical by construction.
+
+    Args:
+      capacity:    resident row slots; 0 disables the store.
+      vecs:        (V, w) embeddings (same array the bound path uses).
+      rows_bucket: static miss-compute chunk (must match the service's
+                   transient ``rows_bucket`` for the on/off bitwise pin).
+      metrics:     optional `repro.obs.MetricsRegistry` -> ``wmd_mcache_*``.
+    """
+
+    def __init__(self, capacity: int, vecs, *, rows_bucket: int = 128,
+                 metrics=None):
+        self.capacity = int(capacity)
+        self.rows_bucket = int(rows_bucket)
+        self._vecs = vecs if isinstance(vecs, jax.Array) else jnp.asarray(vecs)
+        self.vocab = self._vecs.shape[0]
+        self._b2 = jnp.sum(self._vecs * self._vecs, axis=-1)
+        self._alloc_buffers()
+        self.stats = KCacheStats()
+        self._m = None
+        if metrics is not None:
+            self._m = {
+                "lookups": metrics.counter(
+                    "wmd_mcache_lookups_total",
+                    "m_stripes_for_batch calls"),
+                "hit_rows": metrics.counter(
+                    "wmd_mcache_hit_rows_total",
+                    "unique M rows served from the resident store"),
+                "miss_rows": metrics.counter(
+                    "wmd_mcache_miss_rows_total",
+                    "unique M rows computed fresh"),
+                "evictions": metrics.counter(
+                    "wmd_mcache_evictions_total", "LRU evictions"),
+                "bypasses": metrics.counter(
+                    "wmd_mcache_bypasses_total",
+                    "calls that skipped the resident store"),
+                "invalidations": metrics.counter(
+                    "wmd_mcache_invalidations_total",
+                    "full or scoped M-row invalidations"),
+                "resident": metrics.gauge(
+                    "wmd_mcache_resident_rows",
+                    "M rows currently resident"),
+            }
+        self._reset_map()
+
+    def _alloc_buffers(self):
+        """Fresh all-+inf buffer (+1 row: the reserved +inf row pad query
+        rows gather -- scatters never target it, so any slot a real id has
+        not yet claimed is also harmlessly +inf). Also the recovery path
+        when a failed donated scatter consumed the previous buffer."""
+        self._m_buf = jnp.full((self.capacity + 1, self.vocab + 1),
+                               jnp.inf, jnp.float32)
+
+    def _compute_chunks(self, ids: np.ndarray):
+        """Yield (chunk_len, m_rows) over fixed rows_bucket chunks (pad ids
+        point at word 0; their rows are discarded by the caller)."""
+        from repro.core.rwmd import _m_row_block
+        rb = self.rows_bucket
+        for lo in range(0, len(ids), rb):
+            chunk = ids[lo:lo + rb]
+            ids_p = np.zeros(rb, np.int32)
+            ids_p[:len(chunk)] = chunk
+            yield len(chunk), _m_row_block(jnp.asarray(ids_p), self._vecs,
+                                           self._b2)
+
+    def m_stripes_for_batch(self, sel_b: np.ndarray, row_mask: np.ndarray, *,
+                            use_cache: bool = True):
+        """Assemble the batch's (Q, v_r, V+1) M stripes, computing only
+        missing rows. Mirrors `KCache.stripes_for_batch`; the transient path
+        IS `core.rwmd.assemble_m_stripes`, so cache on/off (and this store
+        vs. no store at all) are bitwise equal by construction."""
+        from repro.core.rwmd import _gather_m_stripes, assemble_m_stripes
+        sel_b = np.asarray(sel_b)
+        ids = np.unique(sel_b)                       # sorted: stable dedup
+        self.stats.lookups += 1
+        self._mirror("lookups")
+        cached = use_cache and 0 < len(ids) <= self.capacity
+        if not cached:
+            if use_cache and self.capacity > 0:
+                self.stats.miss_rows += len(ids)
+                self._mirror("miss_rows", len(ids))
+            self.stats.bypasses += 1
+            self._mirror("bypasses")
+            m_pad = assemble_m_stripes(sel_b, row_mask, self._vecs,
+                                       b2=self._b2,
+                                       rows_bucket=self.rows_bucket)
+            return m_pad, {"unique": len(ids), "hits": 0,
+                           "misses": len(ids), "hit_rate": 0.0,
+                           "cached": False}
+        self._tick += 1
+        slot_arr = np.array([self._slot_of.get(int(i), -1) for i in ids],
+                            np.int64)
+        hit = slot_arr >= 0
+        self._last_used[slot_arr[hit]] = self._tick  # pin the batch's hits
+        miss_ids = ids[~hit]
+        if len(miss_ids):
+            new_slots = self._alloc_slots(len(miss_ids))
+            try:
+                rb = self.rows_bucket
+                for lo, (n_c, m_r) in zip(range(0, len(miss_ids), rb),
+                                          self._compute_chunks(miss_ids)):
+                    slots_p = np.full(rb, self.capacity + 1, np.int32)
+                    slots_p[:n_c] = new_slots[lo:lo + n_c]
+                    self._m_buf = _scatter_m_rows(
+                        self._m_buf, jnp.asarray(slots_p), m_r)
+            except BaseException:
+                # same rollback contract as the K store: never leave
+                # unsubstantiated residency behind; rebuild the (donated)
+                # buffer if the failed scatter consumed it.
+                if getattr(self._m_buf, "is_deleted", bool)():
+                    self._alloc_buffers()
+                    self._reset_map()
+                else:
+                    self._free.extend(new_slots)
+                raise
+            for i, s in zip(miss_ids, new_slots):
+                self._slot_of[int(i)] = s
+                self._id_of[s] = int(i)
+                self._last_used[s] = self._tick
+            slot_arr[~hit] = new_slots
+        n_hit, n_miss = int(hit.sum()), len(miss_ids)
+        self.stats.hit_rows += n_hit
+        self.stats.miss_rows += n_miss
+        if self._m is not None:
+            self._mirror("hit_rows", n_hit)
+            self._mirror("miss_rows", n_miss)
+        slots_b = slot_arr[np.searchsorted(ids, sel_b)]
+        # pad query rows gather the reserved +inf row (index capacity)
+        slots_b = np.where(np.asarray(row_mask) > 0, slots_b,
+                           self.capacity).astype(np.int32)
+        m_pad = _gather_m_stripes(self._m_buf, jnp.asarray(slots_b))
+        return m_pad, {"unique": len(ids), "hits": n_hit, "misses": n_miss,
+                       "hit_rate": n_hit / len(ids), "cached": True}

@@ -67,6 +67,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Callable, Sequence
 
 import msgpack
@@ -121,6 +122,14 @@ class LiveCorpus:
             tracer = NULL_TRACER
         self._tracer = tracer
         self._lock = threading.RLock()
+        # compactions serialize among themselves on a separate lock so the
+        # corpus lock is held only for the begin capture and the final swap
+        # -- never across the O(docs) rebuild or the snapshot fsyncs
+        self._compact_lock = threading.Lock()
+        self._compacting = False
+        self._pending: list[dict] = []
+        self._metrics = None
+        self._lock_hold = None
         self.version = 0
         self.base_version = 0
 
@@ -134,13 +143,23 @@ class LiveCorpus:
         self._docs: dict[int, Doc] = {
             int(i): [(int(w), float(c)) for w, c in d] for i, d in snap_docs}
         self._install_base()
-        # replay this generation's WAL (missing file = empty log; a torn
-        # tail is truncated so the reopened writer extends a verified log)
-        for rec in wal_mod.replay(self._wal_path(self.gen)):
-            if rec["op"] == "add":
-                self._apply_add(rec["ids"], rec["docs"])
-            elif rec["op"] == "remove":
-                self._apply_remove(rec["ids"])
+        # replay EVERY surviving WAL generation ascending, not only the
+        # snapshot's own (missing file = empty log; a torn tail is
+        # truncated so the reopened writer extends a verified log). A
+        # compaction that crashed between the snapshot rename and the
+        # pending re-log leaves records acked during its build phase only
+        # in the PREVIOUS generation's log; replay is idempotent -- a
+        # doc's final state is its last op, so re-applying records the
+        # snapshot already folded in changes nothing.
+        wal_gens = sorted(
+            int(n.split("_")[1].split(".")[0]) for n in os.listdir(path)
+            if n.startswith("wal_"))
+        for g in wal_gens:
+            for rec in wal_mod.replay(self._wal_path(g)):
+                if rec["op"] == "add":
+                    self._apply_add(rec["ids"], rec["docs"])
+                elif rec["op"] == "remove":
+                    self._apply_remove(rec["ids"])
         self._wal = wal_mod.WalWriter(self._wal_path(self.gen),
                                       hook=self._hook, tracer=self._tracer)
 
@@ -161,6 +180,24 @@ class LiveCorpus:
         wal = getattr(self, "_wal", None)
         if wal is not None:
             wal.tracer = t
+
+    @property
+    def metrics(self):
+        return self._metrics
+
+    @metrics.setter
+    def metrics(self, registry) -> None:
+        """Late-bindable `repro.obs` MetricsRegistry; wiring one arms the
+        ``wmd_compact_lock_hold_seconds`` histogram, the observable proof
+        that compaction's corpus-lock holds stay O(swap), not O(rebuild)."""
+        self._metrics = registry
+        self._lock_hold = None if registry is None else registry.histogram(
+            "wmd_compact_lock_hold_seconds",
+            "corpus-lock hold time of each compaction locked phase")
+
+    def _observe_hold(self, t0: float) -> None:
+        if self._lock_hold is not None:
+            self._lock_hold.observe(time.perf_counter() - t0)
 
     def _boundary(self, name: str, **fields) -> None:
         if self._tracer.enabled:
@@ -327,12 +364,14 @@ class LiveCorpus:
                 if not np.isfinite(c) or c < 0:
                     raise ValueError(f"bad count {c} for word {w}")
             docs_c.append(doc)
+        rec = {"op": "add", "ids": ids_c,
+               "docs": [[[w, c] for w, c in d] for d in docs_c]}
         with self._lock:
-            self._wal.append({"op": "add", "ids": ids_c,
-                              "docs": [[[w, c] for w, c in d]
-                                       for d in docs_c]})
+            self._wal.append(rec)
             # the append returned => fsynced => acked-and-recoverable
             self._apply_add(ids_c, docs_c)
+            if self._compacting:     # re-logged into the next generation's
+                self._pending.append(rec)    # WAL at swap (see compact())
             return len(ids_c)
 
     def remove_docs(self, ids: Sequence[int]) -> int:
@@ -340,36 +379,80 @@ class LiveCorpus:
         Removing a never-added id is a durable no-op (logged, replayed,
         still a no-op) -- idempotence keeps WAL replay trivially safe."""
         ids_c = [int(i) for i in ids]
+        rec = {"op": "remove", "ids": ids_c}
         with self._lock:
-            self._wal.append({"op": "remove", "ids": ids_c})
-            return self._apply_remove(ids_c)
+            self._wal.append(rec)
+            removed = self._apply_remove(ids_c)
+            if self._compacting:
+                self._pending.append(rec)
+            return removed
 
     def compact(self) -> None:
         """Merge the delta into a fresh rebuilt base: an interruptible job
         with an atomic segment swap (see the module docstring). Safe to
-        call from a background thread -- it holds the corpus lock, so
-        writers queue behind it; killed anywhere, the old segments stay
-        live and a retry is idempotent."""
-        with self._lock:
-            self._boundary("compact.begin", docs=len(self._docs))
-            ids = sorted(self._docs)
-            docs = [self._docs[i] for i in ids]
-            self._boundary("compact.built")
-            new_gen = self.gen + 1
-            self._write_snapshot(new_gen, ids, docs)
-            # the rename landed: generation new_gen is durable. Everything
-            # below is in-memory swap + cleanup; a crash here recovers to
-            # new_gen with an empty delta -- the same logical corpus.
-            self._boundary("compact.renamed")
-            old_wal = self._wal
-            self._wal = wal_mod.WalWriter(self._wal_path(new_gen),
-                                          hook=self._hook,
-                                          tracer=self._tracer)
-            old_wal.close()
-            self.gen = new_gen
-            self._install_base()
-            self._boundary("compact.done")
-            self._gc(keep_gen=new_gen)
+        call from a background thread; killed anywhere, the old segments
+        stay live and a retry is idempotent.
+
+        The corpus lock is held only for two short windows -- capturing
+        the doc set at ``compact.begin`` and the WAL-rotation + in-memory
+        swap at the end -- NOT across the O(docs) segment rebuild or the
+        snapshot write/fsync between them. Readers and writers proceed
+        against the old segments throughout the build; writes landing
+        then are applied normally (and WAL-acked in the old generation)
+        and additionally buffered, then at swap time re-logged fsynced
+        into the new generation's WAL *before* the generation bump and
+        re-applied onto the rebuilt base -- exactly the state recovery
+        would produce from snapshot + logs. Until a buffered record lands
+        in the new log it remains covered by the old one (recovery
+        replays every surviving WAL generation ascending), so no
+        acknowledged write is ever orphaned by a crash mid-swap.
+        Compactions serialize among themselves on ``_compact_lock``."""
+        with self._compact_lock:
+            with self._lock:
+                t0 = time.perf_counter()
+                self._boundary("compact.begin", docs=len(self._docs))
+                ids = sorted(self._docs)
+                docs = [list(self._docs[i]) for i in ids]
+                self._compacting = True
+                self._pending = []
+            self._observe_hold(t0)
+            try:
+                self._boundary("compact.built")
+                new_gen = self.gen + 1
+                self._write_snapshot(new_gen, ids, docs)
+                # the rename landed: generation new_gen is durable.
+                # Everything below is WAL rotation + in-memory swap; a
+                # crash anywhere here recovers to new_gen plus every
+                # surviving log -- the same logical corpus.
+                with self._lock:
+                    t0 = time.perf_counter()
+                    self._boundary("compact.renamed")
+                    pending = self._pending
+                    old_wal = self._wal
+                    self._wal = wal_mod.WalWriter(self._wal_path(new_gen),
+                                                  hook=self._hook,
+                                                  tracer=self._tracer)
+                    for rec in pending:      # re-log build-window writes
+                        self._wal.append(rec)
+                    old_wal.close()
+                    self.gen = new_gen
+                    # rebuild exactly what recovery would produce: base =
+                    # the snapshot's docs, delta = the re-applied pending
+                    self._docs = {int(i): list(d)
+                                  for i, d in zip(ids, docs)}
+                    self._install_base()
+                    for rec in pending:
+                        if rec["op"] == "add":
+                            self._apply_add(rec["ids"], rec["docs"])
+                        else:
+                            self._apply_remove(rec["ids"])
+                    self._boundary("compact.done")
+                self._observe_hold(t0)
+            finally:
+                with self._lock:
+                    self._compacting = False
+                    self._pending = []
+            self._gc(keep_gen=self.gen)
 
     def _gc(self, keep_gen: int) -> None:
         for name in os.listdir(self.path):
@@ -453,5 +536,6 @@ class LiveCorpus:
                     "delta_nnz_max": int(self._dcols.shape[1]),
                     "version": self.version,
                     "base_version": self.base_version,
+                    "compacting": self._compacting,
                     "wal_bytes": (os.path.getsize(wal_path)
                                   if os.path.exists(wal_path) else 0)}

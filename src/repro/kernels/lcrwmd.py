@@ -1,0 +1,82 @@
+"""Pallas TPU kernel for the LC-RWMD dense-gather + SpMV tier.
+
+Tier 1 of the retrieval cascade (`core.cascade`): the per-vocab-word
+min-cost vector ``minm[q, c] = min_i M[q, i, c]`` is gathered once per
+query *outside* the kernel, so scoring a doc is a single sparse dot over
+its ELL slots -- the min-SDDMM of `kernels.rwmd` with the min hoisted out
+of the doc loop:
+
+  grid = (Q/q_blk, N/docs_blk)          # minm stripe resident per Q stripe
+  for j in docs_blk:                    # docs of this tile
+    for s in nnz_max:                   # slots of doc j
+      mc   = minm[:, cols[j,s]]         # (q_blk,) -- ONE gather, no min
+      acc += where(vals[j,s] != 0, vals[j,s] * mc, 0)
+  lb[:, tile_j] = acc
+
+Pad conventions (enforced by the `ops.lc_rwmd_bound_batch` wrapper):
+  * all-pad filler queries carry an all-+inf minm row (the
+    `core.rwmd.assemble_m_stripes` +inf pad-row convention survives the
+    min), producing +inf partials the wrapper finites to 0;
+  * pad *ELL slots* (val == 0) are excluded by the val mask, so the minm
+    pad column's value is irrelevant;
+  * pad docs gather the pad column with val 0 and are sliced off.
+
+VMEM working set per grid step is the min-SDDMM's divided by v_r: the
+(q_blk, Vloc+1) minm stripe dominates; cols/vals tiles add
+2 * docs_blk * nnz_max * 4B; the output tile is (q_blk, docs_blk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lc_kernel(minm_ref, cols_ref, vals_ref, lb_ref):
+    """One (doc tile, Q stripe): per-slot gather feeds all q_blk dots."""
+    q_blk = minm_ref.shape[0]
+    docs_blk, nnz_max = cols_ref.shape
+    dtype = lb_ref.dtype
+
+    def doc_body(j, _):
+        def slot_body(s, acc):
+            col = cols_ref[j, s]
+            mc = minm_ref[:, col]                    # (q_blk,) ONE gather
+            val = vals_ref[j, s]
+            return acc + jnp.where(val != 0.0, val * mc, 0.0)
+
+        acc = jax.lax.fori_loop(
+            0, nnz_max, slot_body, jnp.zeros((q_blk,), dtype))
+        lb_ref[:, 0, j] = acc
+        return 0
+
+    jax.lax.fori_loop(0, docs_blk, doc_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("docs_blk", "q_blk", "interpret"))
+def lc_rwmd_bound_batch(minm: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                        docs_blk: int = 8, q_blk: int = 8,
+                        interpret: bool = False) -> jax.Array:
+    """Batched LC sparse dot. Shapes: minm (Q, Vloc+1), cols/vals
+    (N, nnz_max) with N % docs_blk == 0 and Q % q_blk == 0. Returns (Q, N)
+    raw partial bounds (callers finite-ize filler-query rows)."""
+    q = minm.shape[0]
+    n, nnz_max = cols.shape
+    grid = (q // q_blk, n // docs_blk)       # minm stripes stay VMEM-resident
+    out = pl.pallas_call(
+        _lc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_blk, minm.shape[1]), lambda qi, i: (qi, 0)),
+            pl.BlockSpec((docs_blk, nnz_max), lambda qi, i: (i, 0)),
+            pl.BlockSpec((docs_blk, nnz_max), lambda qi, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((q_blk, 1, docs_blk),
+                               lambda qi, i: (qi, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, 1, n), vals.dtype),
+        interpret=interpret,
+    )(minm, cols, vals)
+    return out[:, 0]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import cdist as _cdist_kernel
 from repro.kernels import kexp as _kexp_kernel
+from repro.kernels import lcrwmd as _lcrwmd_kernel
 from repro.kernels import rwmd as _rwmd_kernel
 from repro.kernels import sddmm_spmm as _sddmm_spmm
 from repro.kernels._pad import pad_axis
@@ -129,6 +130,31 @@ def rwmd_bound_batch(m_pad: jax.Array, cols: jax.Array, vals: jax.Array, *,
     vals_p = _pad_to(vals, 0, docs_blk)
     lb = _rwmd_kernel.rwmd_bound_batch(
         m_p, cols_p, vals_p,
+        docs_blk=docs_blk, q_blk=q_blk, interpret=_interpret())
+    lb = lb[:q, :n]
+    return jnp.where(jnp.isfinite(lb), lb, 0.0)
+
+
+def lc_rwmd_bound_batch(minm: jax.Array, cols: jax.Array, vals: jax.Array, *,
+                        docs_blk: int = 8,
+                        q_blk: int | None = None) -> jax.Array:
+    """Batched LC-RWMD sparse dot; see kernels.lcrwmd. Returns (Q, N).
+
+    Pads Q to q_blk with **+inf** minm rows (matching the all-+inf rows
+    real filler queries carry), docs to docs_blk with ELL pad slots (val 0
+    -> masked out); un-pads the result and finites all-pad filler-query
+    rows to 0 (the engine's distance for them is exactly 0, so a 0 bound
+    can never prune them).
+    """
+    q = minm.shape[0]
+    n = cols.shape[0]
+    if q_blk is None:
+        q_blk = min(q, 8)
+    minm_p = _pad_to(minm, 0, q_blk, value=float("inf"))
+    cols_p = _pad_to(cols, 0, docs_blk, value=minm.shape[-1] - 1)
+    vals_p = _pad_to(vals, 0, docs_blk)
+    lb = _lcrwmd_kernel.lc_rwmd_bound_batch(
+        minm_p, cols_p, vals_p,
         docs_blk=docs_blk, q_blk=q_blk, interpret=_interpret())
     lb = lb[:q, :n]
     return jnp.where(jnp.isfinite(lb), lb, 0.0)

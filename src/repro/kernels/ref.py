@@ -75,6 +75,19 @@ def rwmd_bound_batch(m_pad: jax.Array, cols: jax.Array,
     return jnp.where(jnp.isfinite(lb), lb, 0.0)
 
 
+def lc_rwmd_bound_batch(minm: jax.Array, cols: jax.Array,
+                        vals: jax.Array) -> jax.Array:
+    """Oracle for the LC-RWMD sparse dot (core.cascade / kernels.lcrwmd):
+    densify the ELL and contract the (Q, V) min-cost vectors against it as
+    one dense matmul -- no gather, no slot loop. Filler queries carry
+    all-+inf minm rows, finited to 0 here exactly like the production
+    paths."""
+    num_vocab = minm.shape[-1] - 1
+    c = _ell_to_dense(cols, vals, num_vocab)                  # (V, N)
+    lb = minm[:, :num_vocab] @ c
+    return jnp.where(jnp.isfinite(lb), lb, 0.0)
+
+
 def cdist(a: jax.Array, b: jax.Array, *, squared: bool = False) -> jax.Array:
     """Oracle: direct elementwise |a_i - b_j|."""
     d2 = jnp.sum((a[:, None, :] - b[None, :, :]) ** 2, axis=-1)

@@ -42,6 +42,15 @@ Compile accounting
 retrievals inside a ``with`` block. A shape served entirely from live jit
 caches fires neither -- the post-warmup steady state the zero-first-hit
 tests assert.
+
+Cascade shapes
+--------------
+The top-k warm dispatches run the full retrieval cascade, so the tier-0
+moments matmul, the LC-RWMD program for the configured ``lc_impl``, the
+capped doc-side bound, and the M-cache's miss-compute/scatter programs
+(shapes keyed by the same rows_bucket sweep as the K cache's) all compile
+during warmup; no extra registry entries are needed because the tiers are
+internal to the ``top_k``/``top_k_union`` dispatch shapes.
 """
 from __future__ import annotations
 

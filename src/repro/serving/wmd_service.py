@@ -141,10 +141,11 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import sinkhorn_wmd as wmd_cfg
+from repro.core import cascade as cascade_core
 from repro.core import formats, select_query
 from repro.core import guards as _guards
 from repro.core import rwmd as rwmd_core
-from repro.core.kcache import KCache
+from repro.core.kcache import KCache, MCache
 from repro.core.distributed import (build_wmd_batch_fn,
                                     build_wmd_batch_fn_stripes, build_wmd_fn,
                                     pad_query, pad_query_batch,
@@ -189,6 +190,10 @@ class WMDService:
     prune_margin: float = 1e-3
     bound_impl: str = "fused"
     bound_docs_chunk: int | None = 256
+    mcache_capacity: int = 0
+    tier0: bool = True
+    lc_impl: str | None = "fused"
+    tier2_cap: int | None = None
     guards: bool = True
     live: object | None = None          # data.live_corpus.LiveCorpus
     metrics: object | None = None       # repro.obs.MetricsRegistry
@@ -232,6 +237,18 @@ class WMDService:
                               rows_bucket=self.cache_rows_bucket,
                               kexp_impl=self.kexp_impl,
                               metrics=self.metrics)
+        # M-row cache for the bound tiers: same LRU machinery, rows keyed
+        # by word_id alone (no lambda), replicated like the bound ELL. Its
+        # transient path IS assemble_m_stripes, so capacity 0 (the default)
+        # changes nothing but the amortization.
+        self._mcache = MCache(self.mcache_capacity, self._vecs_d,
+                              rows_bucket=self.cache_rows_bucket,
+                              metrics=self.metrics)
+        # any pruned dispatch that silently degrades to an exact full scan
+        # must be countable, not just visible in last_prune_stats
+        self._prune_fallbacks = self.metrics.counter(
+            "wmd_prune_fallback_total",
+            "pruned top-k dispatches that fell back to the exact full scan")
         # prefilter state: the bound runs replicated on the ORIGINAL
         # (un-rebucketed) ELL -- the min over a doc's words needs the doc's
         # whole support, which vocab re-bucketing splits across shards
@@ -255,6 +272,10 @@ class WMDService:
             (self.vecs.astype(np.float64) ** 2).sum(axis=-1).max())) \
             if self.vecs.size else 0.0
         self._empty_doc_mask = np.asarray(self.ell.vals.sum(axis=-1) == 0)
+        # tier-0 moments (per-doc mass-weighted vector sum + mass) are a
+        # pure function of the corpus ELL: computed lazily on the first
+        # pruned dispatch, dropped whenever the base segment changes
+        self._cent: tuple | None = None
         self.last_batch_stats: dict = {}
         self.last_prune_stats: dict = {}
         self._engine_lock = threading.RLock()   # see _serialized
@@ -267,6 +288,10 @@ class WMDService:
         self._live_base_version = (self.live.base_version
                                    if self.live is not None else -1)
         self._live_version = -1
+        if self.live is not None and self.live.metrics is None:
+            # arm the corpus's compaction lock-hold histogram on this
+            # service's registry (late-bindable, like its tracer)
+            self.live.metrics = self.metrics
 
     def async_service(self, **kw):
         """Async admission front-end: a `serving.coalescer.QueryCoalescer`
@@ -321,8 +346,16 @@ class WMDService:
         rebucketed base, its sharded device arrays and the bound tier's
         replicated ELL. version bump (any mutation): re-place the delta
         segment and rebuild the gather map. Versions are read under the
-        engine lock, which every mutating service entry point also holds."""
+        engine lock, which every mutating service entry point also holds --
+        and under the CORPUS lock (reentrant), because `LiveCorpus.compact`
+        builds outside its lock and swaps under it: without the corpus
+        lock, the version reads, the base_ell read and the locations()
+        read here could straddle a concurrent swap and mix segments."""
         lc = self.live
+        with lc._lock:
+            self._refresh_live_locked(lc)
+
+    def _refresh_live_locked(self, lc) -> None:
         if lc.base_version != self._live_base_version:
             self.ell = lc.base_ell
             model_size = self.mesh.shape["model"]
@@ -335,6 +368,7 @@ class WMDService:
             self._ell_vals_d = jnp.asarray(self.ell.vals)
             self._empty_doc_mask = np.asarray(
                 self.ell.vals.sum(axis=-1) == 0)
+            self._cent = None                # tier-0 moments follow the base
             self._live_base_version = lc.base_version
             self._live_version = -1          # gather map must follow
         if lc.version != self._live_version:
@@ -411,9 +445,7 @@ class WMDService:
             return np.zeros((q, n_live), np.float32)
         self._validate_queries(rs)
         sel_b, r_b, mask_b = self._padded_query_batch(rs)
-        m_pad = rwmd_core.assemble_m_stripes(
-            sel_b, mask_b, self._vecs_d, b2=self._b2,
-            rows_bucket=self.cache_rows_bucket)
+        m_pad, _ = self._mcache.m_stripes_for_batch(sel_b, mask_b)
         out = np.empty((q, n_live), np.float32)
         for seg_id, (cols_d, vals_d) in enumerate(
                 ((self._ell_cols_d, self._ell_vals_d),
@@ -461,10 +493,14 @@ class WMDService:
 
     @_serialized
     def invalidate_embedding_rows(self, word_ids) -> int:
-        """Scoped K-cache invalidation for *embedding* updates: drops
-        exactly the rows of ``word_ids`` (`KCache.invalidate_ids`).
-        Corpus mutations never need this -- rows don't depend on docs."""
-        return self._kcache.invalidate_ids(word_ids)
+        """Scoped cache invalidation for *embedding* updates: drops exactly
+        the rows of ``word_ids`` from BOTH row stores (the K/KM cache and
+        the bound tiers' M-row cache -- an M row is a pure function of
+        (word_id, vecs) too). Returns the total rows dropped across the two
+        stores. Corpus mutations never need this -- rows don't depend on
+        docs."""
+        return (self._kcache.invalidate_ids(word_ids)
+                + self._mcache.invalidate_ids(word_ids))
 
     # -- numeric guards ---------------------------------------------------
 
@@ -513,6 +549,16 @@ class WMDService:
     def cache_resident(self) -> int:
         """Word-id rows currently resident in the cross-query cache."""
         return self._kcache.resident
+
+    @property
+    def mcache_stats(self):
+        """Cumulative M-row cache counters (`core.kcache.KCacheStats`)."""
+        return self._mcache.stats
+
+    @property
+    def mcache_resident(self) -> int:
+        """M rows currently resident in the bound tiers' row cache."""
+        return self._mcache.resident
 
     def _single_fn(self):
         """Per-query solver, keyed by lamb so a mutated cfg.lamb can't serve
@@ -761,10 +807,13 @@ class WMDService:
         `_top_k_union`).
 
         Live services return REAL doc ids (ascending-id positions mapped
-        through `live_doc_ids`), and ``prune=True`` degrades transparently
-        to the exact full scan (`_top_k_live_fallback`): the answer is
-        identical by the pruned == scan contract, only the solves_avoided
-        speedup is forfeited until the pruned tier learns segments."""
+        through `live_doc_ids`), and ``prune=True`` runs the cascade over
+        the immutable base segment while exact-solving the small delta
+        outright (`_top_k_live_pruned`) -- same bits as the full scan,
+        most of its speedup. Only ``rerank="union"`` still degrades to the
+        exact full scan (`_top_k_live_fallback`, counted by the
+        ``wmd_prune_fallback_total`` metric): the answer is identical by
+        the pruned == scan contract, only the speedup is forfeited."""
         if rerank not in ("per_query", "union"):
             raise ValueError(f"rerank must be per_query|union, "
                              f"got {rerank!r}")
@@ -773,7 +822,10 @@ class WMDService:
                              "pass prune=True")
         if prune:
             if self.live is not None:
-                return self._top_k_live_fallback(rs, k, **kw)
+                if rerank == "union":
+                    return self._top_k_live_fallback(rs, k, **kw)
+                return self._top_k_live_pruned(rs, k, exhaustive=False,
+                                               **kw)
             if rerank == "union":
                 return self._top_k_union(rs, k, **kw)
             return self._top_k_pruned(rs, k, exhaustive=False, **kw)
@@ -792,7 +844,7 @@ class WMDService:
         construction of the shared prefix (identical programs on identical
         inputs) plus bound soundness for the pruned suffix."""
         if self.live is not None:
-            return self._top_k_live_fallback(rs, k, **kw)
+            return self._top_k_live_pruned(rs, k, exhaustive=True, **kw)
         return self._top_k_pruned(rs, k, exhaustive=True, **kw)
 
     @_serialized
@@ -805,7 +857,11 @@ class WMDService:
         """Pruned-top-k fallback on a live corpus: the exact full scan
         through the per-segment dispatch. The prune knobs are accepted and
         ignored (there is nothing to prune); ``last_prune_stats`` records
-        the route so callers/benches see the forfeited speedup."""
+        the route and ``wmd_prune_fallback_total`` counts the dispatch so
+        callers/benches/dashboards see the forfeited speedup. Since the
+        segment-aware pruned path landed, only ``rerank="union"`` (whose
+        shared block schedule does not yet span segments) routes here."""
+        self._prune_fallbacks.inc()
         t0 = time.perf_counter()
         d = self._query_batch_live(rs, impl=impl, use_cache=use_cache)
         q, n = d.shape
@@ -822,23 +878,242 @@ class WMDService:
         ids = self._live_ids[idx] if idx.size else idx
         return ids, dist
 
+    @_serialized
+    def _top_k_live_pruned(self, rs: Sequence[np.ndarray], k: int, *,
+                           exhaustive: bool, impl: str | None = None,
+                           use_cache: bool | None = None,
+                           prune_chunk: int | None = None,
+                           prune_margin: float | None = None
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Pruned top-k over a live corpus: cascade bounds over the
+        immutable base segment, exact-solve the delta outright.
+
+        Per query, the delta segment -- small, capacity-bounded, and the
+        only part that mutates between compactions -- is solved whole with
+        the same unchunked per-segment program `_query_batch_live`
+        dispatches, seeding the running k-th-distance threshold. Live base
+        docs are then visited in ascending cascade-bound order through the
+        same fixed ``(1, chunk)`` stripes programs as the static pruned
+        path, pruning against that threshold. The result is bitwise the
+        full-scan answer for the usual three reasons: per-doc distance
+        bits are independent of chunk-mates and batch-mates, the K cache
+        assembles bit-identical rows either way, and a pruned doc's exact
+        distance strictly exceeds the final threshold so it can neither
+        enter nor tie into the top-k. ``exhaustive`` disables the drop
+        (same programs, same order) -- the live scan oracle."""
+        self._refresh_live()
+        n_live = self._live_ids.size
+        q = len(rs)
+        k_eff = min(k, n_live)
+        if q == 0 or n_live == 0:
+            return (np.zeros((q, k_eff), np.int64),
+                    np.zeros((q, k_eff), np.float32))
+        self._validate_queries(rs)
+        chunk = self._rerank_chunk if prune_chunk is None else \
+            -(-max(prune_chunk, 1) // self._doc_shards) * self._doc_shards
+        margin = self.prune_margin if prune_margin is None else prune_margin
+        sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        use = use_cache is not False
+        t0 = time.perf_counter()
+        combined, tiers = self._cascade_bounds(sel_b, r_b, mask_b,
+                                               use_cache=use)
+        bounds = combined[:q]               # columns: base-segment rows
+        t_bound = time.perf_counter() - t0
+        self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
+        fn = self._stripe_fn(impl or self.impl, None)
+        bpos = np.nonzero(self._live_seg == 0)[0]   # live base positions
+        dpos = np.nonzero(self._live_seg == 1)[0]   # live delta positions
+        brow = self._live_row[bpos]                 # base-segment rows
+        idx_out = np.empty((q, k_eff), np.int64)
+        d_out = np.empty((q, k_eff), np.float32)
+        solves = 0
+        programs = 0
+        hits = misses = 0
+        t0 = time.perf_counter()
+        for i in range(q):
+            k_s, km_s, info = self._kcache.stripes_for_batch(
+                sel_b[i:i + 1], mask_b[i:i + 1], use_cache=use)
+            self._check_km(km_s, mask_b[i:i + 1])
+            hits += info["hits"]
+            misses += info["misses"]
+            r_q = jnp.asarray(r_b[i:i + 1])
+            solved_d = np.full(n_live, np.inf, np.float32)
+            if dpos.size:
+                d_seg = np.asarray(fn(k_s, km_s, r_q, self._dcols_d,
+                                      self._dvals_d))[0]
+                solved_d[dpos] = d_seg[self._live_row[dpos]]
+                programs += 1
+            n_solved = dpos.size
+            threshold = np.inf
+            if n_solved >= k_eff:
+                cur = self._top_k(solved_d, k_eff)
+                threshold = float(solved_d[cur[-1]])
+            lb = bounds[i][brow]            # bounds per live base position
+            order = np.argsort(lb, kind="stable")
+            pos = 0
+            while pos < bpos.size:
+                block = order[pos:pos + chunk]
+                if not exhaustive and n_solved >= k_eff:
+                    block = block[lb[block] * (1.0 - margin) <= threshold]
+                    if block.size == 0:
+                        break
+                solved_d[bpos[block]] = self._solve_docs(
+                    fn, k_s, km_s, r_q, brow[block], chunk)[0]
+                solves += block.size
+                programs += 1
+                n_solved += block.size
+                pos += block.size
+                if n_solved >= k_eff:
+                    cur = self._top_k(solved_d, k_eff)
+                    threshold = float(solved_d[cur[-1]])
+            sel = self._top_k(solved_d, k_eff)
+            idx_out[i] = sel
+            d_out[i] = solved_d[sel]
+        t_rerank = time.perf_counter() - t0
+        exact = solves + q * int(dpos.size)
+        final_thresh = (d_out[:, -1].astype(np.float32) if k_eff
+                        else np.full(q, np.inf, np.float32))
+        n_base = int(self._ell_cols_d.shape[0])
+        self.last_prune_stats = {
+            "queries": q, "docs": n_live, "k": k_eff, "chunk": chunk,
+            "margin": margin, "exhaustive": exhaustive,
+            "rerank": "live_pruned",
+            "exact_solves": exact, "scan_solves": q * n_live,
+            "solves_avoided": 1.0 - exact / (q * n_live),
+            "rerank_programs": programs, "delta_docs": int(dpos.size),
+            "bound_s": t_bound, "rerank_s": t_rerank,
+            "tiers": self._tier_stats(tiers, final_thresh, q, n_base,
+                                      margin),
+        }
+        self._check_result(d_out, what="top_k distances",
+                           empty_doc_mask=self._live_empty[idx_out])
+        total = hits + misses
+        self.last_batch_stats = {
+            "hit_rate": hits / total if total else 0.0,
+            "precompute_s": t_bound, "solve_s": t_rerank,
+        }
+        ids = self._live_ids[idx_out] if idx_out.size else idx_out
+        return ids, d_out
+
     # -- two-tier pruned retrieval ---------------------------------------
 
-    def _bounds_for_batch(self, sel_b: np.ndarray,
-                          mask_b: np.ndarray) -> np.ndarray:
+    def _bounds_for_batch(self, sel_b: np.ndarray, mask_b: np.ndarray, *,
+                          use_cache: bool = True) -> np.ndarray:
         """(Q_pow2, v_r) padded queries -> (Q_pow2, N) RWMD lower bounds.
 
         One batched prefilter program: word ids deduped across the whole
-        batch (the K-cache's dedup pattern), M rows computed once per
-        unique id in ``cache_rows_bucket`` chunks, one min-SDDMM over the
-        replicated corpus ELL."""
-        m_pad = rwmd_core.assemble_m_stripes(
-            sel_b, mask_b, self._vecs_d, b2=self._b2,
-            rows_bucket=self.cache_rows_bucket)
+        batch (the K-cache's dedup pattern), M rows served by the M-row
+        cache (transient path == `assemble_m_stripes`, bitwise), one
+        min-SDDMM over the replicated corpus ELL. This is the brownout
+        tier's bound; the pruned top-k paths use `_cascade_bounds`."""
+        m_pad, _ = self._mcache.m_stripes_for_batch(sel_b, mask_b,
+                                                    use_cache=use_cache)
         lb = rwmd_core.rwmd_bound_batch(
             m_pad, self._ell_cols_d, self._ell_vals_d,
             impl=self.bound_impl, docs_chunk=self.bound_docs_chunk)
         return np.asarray(lb)
+
+    def _base_centroids(self):
+        """Cached tier-0 moments of the current base ELL (lazy; dropped by
+        `_refresh_live` when a compaction swaps the base segment)."""
+        if self._cent is None:
+            self._cent = cascade_core.doc_centroids(
+                self._ell_cols_d, self._ell_vals_d, self._vecs_d)
+        return self._cent
+
+    def _cascade_bounds(self, sel_b: np.ndarray, r_b: np.ndarray,
+                        mask_b: np.ndarray, *, use_cache: bool = True
+                        ) -> tuple[np.ndarray, list]:
+        """Run the enabled bound tiers over the (base) corpus and compose.
+
+        Returns ``(combined, tiers)``: combined (Q_pow2, N) is the
+        elementwise max of every enabled tier's bounds -- a max of lower
+        bounds is a lower bound, so the composition is sound tier-by-tier
+        and the prune contract (bounds only reorder and skip) is inherited
+        unchanged. With every tier disabled the combined bound is all
+        zeros: distances are >= 0, so a zero bound never prunes and the
+        pruned path degenerates to the exhaustive scan -- same bits, no
+        speedup. ``tiers`` carries per-tier (name, bounds, seconds) for
+        the post-hoc survivor stats (`_tier_stats`).
+
+        Tier 0 (centroid screen) is one dense (Q, dim) x (dim, N) matmul
+        over cached per-doc moments. Tier 1 (LC-RWMD) reduces the M
+        stripes to per-vocab-word min-cost vectors once per query, then
+        scores every doc with one sparse dot. Tier 2 re-derives the
+        doc-side RWMD on the ``tier2_cap`` most-promising docs only (by
+        min-over-queries combined bound so every query shares one subset)
+        -- numerically it equals tier 1 where both run (the LC hoist is an
+        identity), so its role is covering LC-disabled configs and pinning
+        the tier-subsumption property; its cost is capped by the subset.
+        """
+        tiers: list[dict] = []
+        n = int(self._ell_cols_d.shape[0])
+        qp = sel_b.shape[0]
+        combined = np.zeros((qp, n), np.float32)
+        if self.tier0:
+            t0 = time.perf_counter()
+            g, m = self._base_centroids()
+            b = np.asarray(cascade_core.centroid_bound_batch(
+                jnp.asarray(sel_b), jnp.asarray(r_b), jnp.asarray(mask_b),
+                self._vecs_d, g, m))
+            tiers.append({"tier": "centroid", "bounds": b,
+                          "seconds": time.perf_counter() - t0})
+            combined = np.maximum(combined, b)
+        need_m = self.lc_impl is not None or self.tier2_cap != 0
+        if need_m:
+            m_pad, _ = self._mcache.m_stripes_for_batch(
+                sel_b, mask_b, use_cache=use_cache)
+        if self.lc_impl is not None:
+            t0 = time.perf_counter()
+            minm = cascade_core.min_cost_vectors(m_pad)
+            b = np.asarray(cascade_core.lc_rwmd_bound_batch(
+                minm, self._ell_cols_d, self._ell_vals_d,
+                impl=self.lc_impl, docs_chunk=self.bound_docs_chunk))
+            tiers.append({"tier": "lc_rwmd", "bounds": b,
+                          "seconds": time.perf_counter() - t0})
+            combined = np.maximum(combined, b)
+        t2 = (4 * self._rerank_chunk if self.tier2_cap is None
+              else self.tier2_cap)
+        t2 = min(t2, n)
+        if t2 > 0:
+            t0 = time.perf_counter()
+            key = combined.min(axis=0)
+            subset = np.sort(np.argsort(key, kind="stable")[:t2])
+            lb2 = np.asarray(rwmd_core.rwmd_bound_batch(
+                m_pad, self._ell_cols_d[subset], self._ell_vals_d[subset],
+                impl=self.bound_impl, docs_chunk=None))
+            b = np.zeros_like(combined)
+            b[:, subset] = lb2
+            tiers.append({"tier": "rwmd", "bounds": b,
+                          "seconds": time.perf_counter() - t0})
+            combined = np.maximum(combined, b)
+        return combined, tiers
+
+    @staticmethod
+    def _tier_stats(tiers: list, thresholds: np.ndarray, q: int, n: int,
+                    margin: float) -> list[dict]:
+        """Post-hoc per-tier survivor counts against the FINAL per-query
+        thresholds: how many (query, doc) cells each tier's bound alone
+        fails to prune (the same ``bound * (1 - margin) <= threshold``
+        test the rerank loop applies), plus the cumulative survivors of
+        the tiers composed so far -- the cascade's actual funnel."""
+        out = []
+        cum = None
+        for t in tiers:
+            b = t["bounds"][:q]
+            cum = b if cum is None else np.maximum(cum, b)
+            alive = b * (1.0 - margin) <= thresholds[:, None]
+            alive_cum = cum * (1.0 - margin) <= thresholds[:, None]
+            cells = max(q * n, 1)
+            out.append({
+                "tier": t["tier"], "seconds": t["seconds"],
+                "survivors": int(alive.sum()),
+                "solves_avoided": 1.0 - int(alive.sum()) / cells,
+                "cascade_survivors": int(alive_cum.sum()),
+                "cascade_solves_avoided":
+                    1.0 - int(alive_cum.sum()) / cells,
+            })
+        return out
 
     def _solve_docs(self, fn, k_s, km_s, r_q, doc_ids: np.ndarray,
                     chunk: int) -> np.ndarray:
@@ -895,11 +1170,13 @@ class WMDService:
         margin = self.prune_margin if prune_margin is None else prune_margin
         q = len(rs)
         sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        use = use_cache is not False
         t0 = time.perf_counter()
-        bounds = self._bounds_for_batch(sel_b, mask_b)[:q]
+        combined, tiers = self._cascade_bounds(sel_b, r_b, mask_b,
+                                               use_cache=use)
+        bounds = combined[:q]
         t_bound = time.perf_counter() - t0
         self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
-        use = use_cache is not False
         fn = self._stripe_fn(impl or self.impl, None)  # chunk IS the block
         idx_out = np.empty((q, k_eff), np.int64)
         d_out = np.empty((q, k_eff), np.float32)
@@ -942,6 +1219,8 @@ class WMDService:
             idx_out[i] = sel
             d_out[i] = solved_d[sel]
         t_rerank = time.perf_counter() - t0
+        final_thresh = (d_out[:, -1].astype(np.float32) if k_eff
+                        else np.full(q, np.inf, np.float32))
         self.last_prune_stats = {
             "queries": q, "docs": n, "k": k_eff, "chunk": chunk,
             "margin": margin, "exhaustive": exhaustive,
@@ -950,6 +1229,7 @@ class WMDService:
             "solves_avoided": 1.0 - solves / (q * n),
             "rerank_programs": programs,
             "bound_s": t_bound, "rerank_s": t_rerank,
+            "tiers": self._tier_stats(tiers, final_thresh, q, n, margin),
         }
         # underflowed zeros sort first, so the selected top-k surfaces them
         self._check_result(d_out, what="top_k distances",
@@ -1006,11 +1286,13 @@ class WMDService:
         margin = self.prune_margin if prune_margin is None else prune_margin
         q = len(rs)
         sel_b, r_b, mask_b = self._padded_query_batch(rs)
+        use = use_cache is not False
         t0 = time.perf_counter()
-        lb = self._bounds_for_batch(sel_b, mask_b)[:q]        # (q, N)
+        combined, tiers = self._cascade_bounds(sel_b, r_b, mask_b,
+                                               use_cache=use)
+        lb = combined[:q]                                     # (q, N)
         t_bound = time.perf_counter() - t0
         self._kcache.ensure_lamb(self.cfg.lamb)   # lambda-invalidation
-        use = use_cache is not False
         fn = self._stripe_fn(impl or self.impl, None)
         # ONE stripes assembly for the whole batch (vs per-query on the
         # online path) -- rows are bit-reproducible either way
@@ -1054,6 +1336,8 @@ class WMDService:
             idx_out[i] = sel
             d_out[i] = solved_d[i][sel]
         solves = q * (n - int(unsolved.sum()))
+        final_thresh = (d_out[:, -1].astype(np.float32) if k_eff
+                        else np.full(q, np.inf, np.float32))
         self.last_prune_stats = {
             "queries": q, "docs": n, "k": k_eff, "chunk": chunk,
             "margin": margin, "exhaustive": False,
@@ -1062,6 +1346,7 @@ class WMDService:
             "solves_avoided": 1.0 - solves / (q * n),
             "rerank_programs": programs,
             "bound_s": t_bound, "rerank_s": t_rerank,
+            "tiers": self._tier_stats(tiers, final_thresh, q, n, margin),
         }
         self.last_batch_stats = {
             "hit_rate": info.get("hit_rate", 0.0),

@@ -84,19 +84,43 @@ def test_synthetic_30pct_slowdown_fails(gate):
     assert gate.compare(base, mild, 0.25)["pass"]
 
 
-def test_missing_baseline_is_lenient(gate):
+def test_missing_baseline_seeds_not_blanks(gate):
     base = _baseline(gate)
     rec = gate.compare({}, base, 0.25)      # no previous artifacts at all
     assert rec["pass"]
-    assert all(r["status"] == "n/a" for r in rec["fields"])
-    # one missing file, one missing field: only those go n/a
+    # measured-now fields seed the trajectory -- current values recorded,
+    # never an all-n/a (empty) first record
+    assert all(r["status"] == "seeded" and r["cur"] is not None
+               for r in rec["fields"])
+    assert rec["seeded"] == len(gate.FIELDS)
+    # a file missing from the PREVIOUS side seeds just that file's fields;
+    # a field missing from the CURRENT side is the true n/a
     partial = json.loads(json.dumps(base))
     first = gate.FIELDS[0][0]
     del partial[first]
     rec = gate.compare(partial, base, 0.25)
     assert rec["pass"]
     statuses = {r["file"]: r["status"] for r in rec["fields"]}
+    assert statuses[first] == "seeded"
+    cur_partial = json.loads(json.dumps(base))
+    del cur_partial[first]
+    rec = gate.compare(base, cur_partial, 0.25)
+    assert rec["pass"]
+    statuses = {r["file"]: r["status"] for r in rec["fields"]}
     assert statuses[first] == "n/a"
+
+
+def test_baseline_status_classification(gate, tmp_path):
+    """"no baseline was downloaded" vs "a download landed empty" are
+    different failure modes; the record must say which happened."""
+    assert gate.baseline_status(None) == "missing-dir"
+    assert gate.baseline_status(str(tmp_path / "nope")) == "missing-dir"
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert gate.baseline_status(str(empty)) == "no-artifacts"
+    fname = gate.FIELDS[0][0]
+    (empty / fname).write_text(json.dumps(_baseline(gate)[fname]))
+    assert gate.baseline_status(str(empty)) == "present"
 
 
 def test_improvement_never_gates(gate):
@@ -163,12 +187,17 @@ def test_cli_end_to_end(gate, tmp_path):
     rec = json.loads(traj.read_text())
     assert not rec["pass"] and rec["regressions"] == len(gate.FIELDS)
     assert "**REGRESSION**" in summary.read_text()
-    # first run: no --prev contents at all -> passes
+    # first run: no --prev contents at all -> passes AND seeds
+    traj2 = tmp_path / "BENCH_trajectory_first.json"
     p = subprocess.run(
         [sys.executable, _SCRIPT, "--prev", str(tmp_path / "nope"),
-         "--cur", str(cur_d)],
+         "--cur", str(cur_d), "--out", str(traj2)],
         capture_output=True, text=True, timeout=60)
     assert p.returncode == 0, p.stdout + p.stderr
+    rec = json.loads(traj2.read_text())
+    assert rec["baseline_status"] == "missing-dir"
+    assert rec["seeded"] == len(gate.FIELDS)
+    assert all(r["cur"] is not None for r in rec["fields"])
     # and the self-test flag itself
     p = subprocess.run([sys.executable, _SCRIPT, "--self-test"],
                        capture_output=True, text=True, timeout=60)

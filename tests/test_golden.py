@@ -2,7 +2,8 @@
 route, checked-in expected outputs asserted BITWISE.
 
 The cross-engine tests (batched == sequential, cache on == off, pruned ==
-scan, kernel == oracle) catch routes drifting from *each other*; what they
+scan, kernel == oracle, live pruned == live scan) catch routes drifting from
+*each other*; what they
 cannot catch is every route drifting *together* -- a silent change to the
 shared math (precompute, safe_recip, iteration order) would ship unnoticed.
 This table pins the absolute values: any PR that changes a single bit of
@@ -175,7 +176,19 @@ def _routes() -> dict:
         lc.add_docs([i], [docs[i]])
     lc.add_docs([order[0]], [docs[order[0]]])      # upsert to the delta
     lc.compact()
-    out["live_recovered"] = live_service(lc).query_batch(rs)
+    lsvc = live_service(lc)
+    out["live_recovered"] = lsvc.query_batch(rs)
+
+    # live pruned top-k: cascade over the immutable base segment plus an
+    # exact-solved delta doc (added after compaction, so the query_batch
+    # routes above keep their bits); scan is its exactness oracle
+    lc.add_docs([999], [docs[1]])                  # the delta segment
+    idx_lp, d_lp = lsvc.top_k_batch(rs, TOP_K, prune=True)
+    out["live_pruned_topk_idx"] = idx_lp
+    out["live_pruned_topk_dist"] = d_lp
+    idx_ls, d_ls = lsvc.top_k_scan_batch(rs, TOP_K)
+    out["live_scan_topk_idx"] = idx_ls
+    out["live_scan_topk_dist"] = d_ls
     return out
 
 
@@ -212,6 +225,11 @@ def test_golden_cross_route_consistency():
     np.testing.assert_array_equal(r["live_oneshot"], r["service_stripes"])
     np.testing.assert_array_equal(r["live_incremental"], r["live_oneshot"])
     np.testing.assert_array_equal(r["live_recovered"], r["live_oneshot"])
+    # the live pruned path (base cascade + exact delta) == its scan oracle
+    np.testing.assert_array_equal(r["live_pruned_topk_idx"],
+                                  r["live_scan_topk_idx"])
+    np.testing.assert_array_equal(r["live_pruned_topk_dist"],
+                                  r["live_scan_topk_dist"])
     # engine-vs-engine: fp32
     np.testing.assert_allclose(r["single_fused"], r["dense"],
                                rtol=2e-3, atol=1e-5)

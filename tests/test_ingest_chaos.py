@@ -296,12 +296,20 @@ def test_service_bitwise_after_crash_and_recovery(tmp_path):
     np.testing.assert_array_equal(dd_l, dd_r)
     np.testing.assert_array_equal(idx_l, idx_r)    # ids ARE doc ids here
 
-    # pruned top-k on live falls back to a transparent exact full scan --
-    # same answers, honest stats
+    # pruned top-k on live runs the segment-aware cascade (bounds over
+    # the base, delta solved whole) -- same answers, honest stats
     idx_p, dd_p = live_svc.top_k_batch(rs, TOP_K, prune=True)
     np.testing.assert_array_equal(dd_p, dd_r)
     np.testing.assert_array_equal(idx_p, idx_r)
+    assert live_svc.last_prune_stats["rerank"] == "live_pruned"
+
+    # only the union rerank still degrades to the counted full scan
+    idx_u, dd_u = live_svc.top_k_batch(rs, TOP_K, prune=True,
+                                       rerank="union")
+    np.testing.assert_array_equal(dd_u, dd_r)
+    np.testing.assert_array_equal(idx_u, idx_r)
     assert live_svc.last_prune_stats["rerank"] == "live_full_scan"
+    assert live_svc.metrics.counter("wmd_prune_fallback_total").value == 1
 
     lb_l = live_svc.query_batch_bounds(rs)
     lb_r = ref_svc.query_batch_bounds(rs)

@@ -81,3 +81,63 @@ def test_rwmd_kernel_docs_chunk_maps_to_grid():
     base = rwmd_bound_batch(m_pad, cols, vals, impl="kernel")
     got = rwmd_bound_batch(m_pad, cols, vals, impl="kernel", docs_chunk=4)
     np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LC-RWMD (kernels.lcrwmd): the tier-1 dense-gather + SpMV kernel
+# ---------------------------------------------------------------------------
+
+def _lc_problem(v, n, vr, q, nnz_hi, seed):
+    """Same random stripes, reduced to (Q, V+1) min-cost vectors."""
+    from repro.core import min_cost_vectors
+    m_pad, cols, vals = _problem(v, n, vr, q, nnz_hi, seed=seed)
+    return min_cost_vectors(m_pad), m_pad, cols, vals
+
+
+@pytest.mark.parametrize("v,n,vr,q,nnz_hi", SHAPES)
+def test_lc_rwmd_kernel_threeway(v, n, vr, q, nnz_hi):
+    """pallas == core-jnp == naive dense oracle, and all bitwise equal to
+    the doc-side bound they hoist the min out of (the cascade's LC link)."""
+    from repro.core import lc_rwmd_bound_batch
+    minm, m_pad, cols, vals = _lc_problem(v, n, vr, q, nnz_hi, seed=v + n)
+    lb_ref = np.asarray(ref.lc_rwmd_bound_batch(minm, cols, vals))
+    lb_core = np.asarray(lc_rwmd_bound_batch(minm, cols, vals))
+    lb_pal = np.asarray(ops.lc_rwmd_bound_batch(minm, cols, vals))
+    np.testing.assert_allclose(lb_core, lb_ref, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(lb_pal, lb_ref, rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(
+        lb_core, np.asarray(rwmd_bound_batch(m_pad, cols, vals)))
+
+
+@pytest.mark.parametrize("docs_blk,q_blk", [(4, 2), (8, 8), (16, 4)])
+def test_lc_rwmd_kernel_tiling_invariance(docs_blk, q_blk):
+    minm, _, cols, vals = _lc_problem(96, 32, 7, 4, 10, seed=7)
+    base = ops.lc_rwmd_bound_batch(minm, cols, vals, docs_blk=8)
+    got = ops.lc_rwmd_bound_batch(minm, cols, vals, docs_blk=docs_blk,
+                                  q_blk=q_blk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
+
+
+def test_lc_rwmd_kernel_filler_query_rows_zero():
+    """All-+inf min-cost vectors (filler queries) finite-ize to exactly 0
+    in every spelling, and their presence leaves real rows untouched."""
+    from repro.core import lc_rwmd_bound_batch
+    minm, _, cols, vals = _lc_problem(64, 16, 6, 3, 8, seed=3)
+    filler = jnp.full((1, minm.shape[1]), jnp.inf, minm.dtype)
+    m_f = jnp.concatenate([minm, filler])
+    for fn in (ops.lc_rwmd_bound_batch, ref.lc_rwmd_bound_batch,
+               lc_rwmd_bound_batch):
+        lb = np.asarray(fn(m_f, cols, vals))
+        assert np.all(lb[-1] == 0.0), fn
+        np.testing.assert_array_equal(
+            lb[:-1], np.asarray(fn(minm, cols, vals)))
+
+
+def test_lc_rwmd_kernel_docs_chunk_maps_to_grid():
+    """core dispatch impl='kernel' routes docs_chunk onto the doc-tile
+    grid -- same results as the default tile."""
+    from repro.core import lc_rwmd_bound_batch
+    minm, _, cols, vals = _lc_problem(64, 24, 5, 2, 8, seed=11)
+    base = lc_rwmd_bound_batch(minm, cols, vals, impl="kernel")
+    got = lc_rwmd_bound_batch(minm, cols, vals, impl="kernel", docs_chunk=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base), rtol=1e-6)
